@@ -1,0 +1,53 @@
+"""Paper Tables II & III: NCCL bus bandwidth, aligned vs unaligned lottery."""
+
+from __future__ import annotations
+
+from repro.topology.gcp import build_a4_cluster
+from repro.topology.netsim import NcclModel, run_lottery
+
+PAPER = {
+    ("all_gather", 65536): (1.29, 0.02, 1.16, 0.06),
+    ("all_gather", 1 << 20): (11.42, 0.19, 8.98, 0.95),
+    ("all_gather", 8 << 30): (46.59, 0.03, 29.20, 5.62),
+    ("all_reduce", 65536): (1.53, 0.03, 1.21, 0.11),
+    ("all_reduce", 1 << 20): (14.11, 0.13, 10.39, 2.60),
+    ("all_reduce", 8 << 30): (46.93, 0.04, 29.68, 6.74),
+}
+
+SIZES = {65536: "64KB", 1 << 20: "1MB", 8 << 30: "8GB"}
+
+
+def run(collective: str, trials: int = 100):
+    fab, nodes = build_a4_cluster(2)
+    model = NcclModel(fab)
+    rows = []
+    for size, label in SIZES.items():
+        a = run_lottery(model, nodes, collective, size, trials, True, seed=1)
+        u = run_lottery(model, nodes, collective, size, trials, False, seed=2)
+        pa = PAPER[(collective, size)]
+        rows.append({
+            "size": label,
+            "aligned_mean": round(a.mean, 2), "aligned_std": round(a.std, 2),
+            "unaligned_mean": round(u.mean, 2), "unaligned_std": round(u.std, 2),
+            "gain_pct": round(100 * (a.mean - u.mean) / u.mean, 1),
+            "paper_aligned": pa[0], "paper_unaligned": pa[2],
+            "paper_gain_pct": round(100 * (pa[0] - pa[2]) / pa[2], 1),
+        })
+    return rows
+
+
+def main():
+    for coll, table in [("all_gather", "II"), ("all_reduce", "III")]:
+        print(f"# Table {table}: NCCL {coll} bus bandwidth (GB/s), "
+              f"2x a4-highgpu-8g, 100-deploy lottery")
+        print("size,aligned_mean,aligned_std,unaligned_mean,unaligned_std,"
+              "gain_pct,paper_aligned,paper_unaligned,paper_gain_pct")
+        for r in run(coll):
+            print(f"{r['size']},{r['aligned_mean']},{r['aligned_std']},"
+                  f"{r['unaligned_mean']},{r['unaligned_std']},{r['gain_pct']},"
+                  f"{r['paper_aligned']},{r['paper_unaligned']},"
+                  f"{r['paper_gain_pct']}")
+
+
+if __name__ == "__main__":
+    main()

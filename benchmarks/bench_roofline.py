@@ -1,0 +1,59 @@
+"""Roofline terms per (arch x shape x mesh) from the dry-run artifacts."""
+
+from __future__ import annotations
+
+import os
+
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.report import load_records
+
+def _dir_for(mesh_tag: str) -> str:
+    if "DRYRUN_DIR" in os.environ:
+        return os.environ["DRYRUN_DIR"]
+    v3 = "experiments/dryrun_v3"
+    if mesh_tag == "16x16" and os.path.isdir(v3):
+        return v3  # shipping model code (adaptive FFN boundary)
+    return "experiments/dryrun"
+
+
+def run(mesh_tag: str = "16x16", dilation: float = 1.0):
+    rows = []
+    for rec in load_records(_dir_for(mesh_tag), mesh_tag):
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec.get("status", "?")})
+            continue
+        r = roofline_terms(rec, dilation={"": dilation})
+        rows.append({
+            "arch": r.arch, "shape": r.shape, "status": "ok",
+            "compute_s": r.compute_s, "memory_s": r.memory_s,
+            "collective_s": r.collective_s, "dominant": r.dominant,
+            "mfu_bound_pct": round(r.mfu_bound() * 100, 1),
+            "useful_flops_pct": round(r.useful_ratio * 100, 1),
+            "mem_gib": round(r.per_device_gib, 2),
+        })
+    return rows
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = run(mesh)
+        if not rows:
+            print(f"# no dry-run records for {mesh} "
+                  f"(run: python -m repro.launch.dryrun --all)")
+            continue
+        print(f"# Roofline, mesh {mesh}, aligned placement (dilation 1.0)")
+        print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+              "mfu_bound_pct,useful_flops_pct,mem_gib")
+        for r in rows:
+            if r.get("status") != "ok":
+                print(f"{r['arch']},{r['shape']},,,,{r['status']},,,")
+                continue
+            print(f"{r['arch']},{r['shape']},{r['compute_s']:.4g},"
+                  f"{r['memory_s']:.4g},{r['collective_s']:.4g},"
+                  f"{r['dominant']},{r['mfu_bound_pct']},"
+                  f"{r['useful_flops_pct']},{r['mem_gib']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Benchmark harness: one module per paper table + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run           # everything
+  PYTHONPATH=src python -m benchmarks.run --only nccl
+
+Paper artifacts:
+  bench_startup    -> Table I   (pod startup latency percentiles)
+  bench_nccl       -> Tables II/III (aligned vs unaligned bus bandwidth)
+  bench_placement  -> the TPU-scale analogue (ICI ring dilation)
+Framework perf:
+  bench_roofline   -> per-cell roofline terms from the dry-run artifacts
+  bench_kernels    -> Pallas kernel micro-bench (interpret-mode wall time
+                      is NOT TPU time; correctness + call overhead only)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def bench_kernels() -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    print("# kernel reference micro-bench (CPU jnp oracle timings)")
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 512, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(key, (1, 512, 2, 64), jnp.float32)
+    f = jax.jit(lambda a, b, c: attention_ref(a, b, c))
+    f(q, k, v).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        f(q, k, v).block_until_ready()
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    flops = 4 * 512 * 512 * 8 * 64
+    print(f"attention_ref_512,{us:.0f},{flops / (us * 1e-6) / 1e9:.1f}GFLOPs")
+
+    x = jax.random.normal(key, (4096, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    g = jax.jit(lambda a: rmsnorm_ref(a, sc))
+    g(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        g(x).block_until_ready()
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    print(f"rmsnorm_ref_4096x1024,{us:.0f},"
+          f"{4096 * 1024 * 8 / (us * 1e-6) / 1e9:.1f}GB/s")
+
+
+SECTIONS = ["startup", "nccl", "placement", "roofline", "kernels"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=SECTIONS)
+    args = ap.parse_args()
+    chosen = [args.only] if args.only else SECTIONS
+
+    for section in chosen:
+        print(f"\n===== {section} =====")
+        if section == "startup":
+            from . import bench_startup
+            bench_startup.main()
+        elif section == "nccl":
+            from . import bench_nccl
+            bench_nccl.main()
+        elif section == "placement":
+            from . import bench_placement
+            bench_placement.main()
+        elif section == "roofline":
+            from . import bench_roofline
+            bench_roofline.main()
+        elif section == "kernels":
+            bench_kernels()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Quickstart: the KND model end-to-end in two minutes (CPU).
+
+Walks the DraNet workflow (paper Fig. 7) against a simulated v5e pod:
+  1. drivers discover the fabric and publish ResourceSlices;
+  2. a ResourceClaim with CEL selectors is allocated (structured DRA);
+  3. the planner embeds a logical mesh into the ICI torus (aligned);
+  4. the OCI-style runtime executes the declarative attachment;
+  5. a (tiny) model trains a few steps on the resulting mesh.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.configs.registry import smoke_config
+from repro.data.pipeline import SyntheticLMData
+from repro.parallel.sharding import ShardingRules, use_rules
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+from repro.train.optimizer import AdamW
+from repro.train.schedule import constant_schedule
+from repro.train.train_step import StepConfig, init_train_state, make_train_step
+
+# 1. discovery ------------------------------------------------------------
+cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=2))
+registry = core.DriverRegistry()
+registry.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
+n = registry.run_discovery()
+print(f"[1] discovery: {n} devices published "
+      f"({len(registry.pool.nodes())} nodes)")
+
+# 2. claim with CEL selection ----------------------------------------------
+claim = core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
+    requests=[core.DeviceRequest(
+        name="chips", device_class="tpu.google.com", count=8,
+        selectors=['device.attributes["generation"] == "v5e"',
+                   'device.capacity["hbm"] >= "8Gi"'])],
+    topology_scope="cluster"))
+allocator = core.StructuredAllocator(registry.pool, registry.classes)
+allocator.allocate(claim)
+registry.prepare(claim)
+print(f"[2] claim {claim.name}: {len(claim.allocation.devices)} chips, "
+      f"prepared={claim.prepared}")
+
+# 3. topology-aware planning ------------------------------------------------
+planner = core.MeshPlanner(cluster)
+plan = planner.plan([core.AxisSpec("data", 2, "y"),
+                     core.AxisSpec("model", 4, "x")], "aligned", claim)
+print(f"[3] {plan.summary()}")
+
+# 4. declarative attachment -------------------------------------------------
+results = registry.bus.publish(core.Events.RUN_POD_SANDBOX,
+                               plan=plan, claim=claim)
+spec = next(r.value for r in results if r.ok and r.value is not None)
+mesh = core.MeshRuntime().execute(spec)
+print(f"[4] mesh attached: {dict(mesh.shape)}")
+
+# 5. train ------------------------------------------------------------------
+cfg = smoke_config("h2o-danube-1.8b")
+data = SyntheticLMData(cfg, global_batch=8, seq_len=64)
+opt = AdamW(constant_schedule(1e-3))
+with use_rules(ShardingRules(mesh=mesh)):
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, StepConfig(remat="dots")),
+                   donate_argnums=(0,))
+    for s in range(10):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        state, metrics = step(state, batch)
+        if s % 3 == 0:
+            print(f"[5] step {s}: loss={float(metrics['loss']):.3f}")
+print("done — the same workflow drives the 256/512-chip production mesh "
+      "in repro.launch.dryrun")

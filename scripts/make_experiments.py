@@ -1,0 +1,27 @@
+"""Regenerate the data tables inside EXPERIMENTS.md from artifacts.
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > /tmp/tables.md
+(The narrative sections of EXPERIMENTS.md are hand-written; this script
+produces the §Dry-run and §Roofline tables.)
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline.report import load_records, render_memory_table, render_table
+
+
+def main() -> None:
+    for mesh in ("16x16", "2x16x16"):
+        import os
+        d = "experiments/dryrun_v3" if (mesh == "16x16" and os.path.isdir("experiments/dryrun_v3")) else "experiments/dryrun"
+        records = load_records(d, mesh)
+        print(f"\n## Mesh {mesh}\n")
+        print(render_table(records, title=f"Roofline — {mesh}, aligned placement"))
+        print()
+        print(render_memory_table(records))
+
+
+if __name__ == "__main__":
+    main()

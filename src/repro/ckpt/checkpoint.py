@@ -1,0 +1,162 @@
+"""Sharded, compressed, async checkpointing (msgpack + zstd).
+
+Layout (one directory per step):
+  step_000100/
+    manifest.json        # tree structure, shapes, dtypes, shard map
+    shard_00000.msgpack.zst   # one file per host in a real deployment
+    _COMMITTED           # written last: crash-safe commit marker
+
+Fault-tolerance contract (paper §II daemon-crash critique -> our
+restart path): a checkpoint is readable iff _COMMITTED exists; partial
+writes from a dying trainer are ignored by restore. The CheckpointManager
+rotates old steps, supports async (background-thread) saves, and resume
+picks the newest committed step.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import shutil
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+COMMIT_MARKER = "_COMMITTED"
+
+
+def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    compress_level: int = 3) -> str:
+    """Write one committed checkpoint; returns its path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "created": time.time()}
+    cctx = zstandard.ZstdCompressor(level=compress_level)
+    payload: Dict[str, bytes] = {}
+    for key, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        manifest["leaves"].append({
+            "key": key, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+        payload[key] = arr.tobytes()
+    blob = msgpack.packb(payload, use_bin_type=True)
+    with open(os.path.join(tmp, "shard_00000.msgpack.zst"), "wb") as f:
+        f.write(cctx.compress(blob))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
+        f.write(str(step))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def list_checkpoints(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        full = os.path.join(directory, name)
+        if (name.startswith("step_") and not name.endswith(".tmp")
+                and os.path.exists(os.path.join(full, COMMIT_MARKER))):
+            steps.append(int(name.split("_")[1]))
+    return sorted(steps)
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``tree_like`` (newest step if None)."""
+    steps = list_checkpoints(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    dctx = zstandard.ZstdDecompressor()
+    with open(os.path.join(path, "shard_00000.msgpack.zst"), "rb") as f:
+        payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+
+    leaves = _flatten_with_paths(tree_like)
+    restored = []
+    for key, leaf in leaves:
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        meta = by_key[key]
+        arr = np.frombuffer(payload[key], dtype=meta["dtype"]).reshape(meta["shape"])
+        restored.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return treedef.unflatten(restored), step
+
+
+@dataclass
+class CheckpointManager:
+    """Rotation + async save + resume, driven by trainer NRI hooks."""
+
+    directory: str
+    keep: int = 3
+    async_save: bool = True
+    _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    _error: Optional[BaseException] = field(default=None, repr=False)
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()
+        # snapshot to host BEFORE returning (async writes the files only)
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        if self.async_save:
+            def work():
+                try:
+                    save_checkpoint(self.directory, step, host_tree)
+                    self._rotate()
+                except BaseException as e:  # noqa: BLE001
+                    self._error = e
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, host_tree)
+            self._rotate()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _rotate(self) -> None:
+        steps = list_checkpoints(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, tree_like: Any) -> Tuple[Any, int]:
+        self.wait()
+        return restore_checkpoint(self.directory, tree_like)
+
+    def latest_step(self) -> Optional[int]:
+        steps = list_checkpoints(self.directory)
+        return steps[-1] if steps else None

@@ -1,0 +1,4 @@
+"""Assigned architecture configs (one module per arch) + shape suite."""
+
+from .shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+from .registry import ARCHS, get_config, smoke_config

@@ -1,0 +1,97 @@
+"""The assigned input-shape suite and ShapeDtypeStruct input_specs().
+
+Four shapes per LM architecture (40 cells total):
+  train_4k     seq 4096   x global_batch 256   -> train_step
+  prefill_32k  seq 32768  x global_batch 32    -> prefill lowering
+  decode_32k   seq 32768  x global_batch 128   -> serve_step (1 token, KV cache)
+  long_500k    seq 524288 x global_batch 1     -> serve_step; sub-quadratic only
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs — never a real
+allocation — for the dry-run (DESIGN.md; the same pattern DRA's
+NodePrepareResources enables: everything needed is known up front).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "input_specs", "shape_applicable",
+           "cache_specs"]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """long_500k requires a sub-quadratic arch (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full quadratic attention at 524288 ctx is infeasible "
+                       "(O(L^2) scores; KV cache alone is fine but prefill/"
+                       "attention cost is not) — skipped per assignment")
+    return True, ""
+
+
+def _token_spec(cfg: ModelConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    if cfg.frontend == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs as ShapeDtypeStructs for the given cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {}
+        if cfg.frontend == "vision":
+            # patches replace the first num_patches positions of the seq
+            s_text = S - cfg.num_patches
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.vit_dim), jnp.bfloat16)
+            specs["tokens"] = _token_spec(cfg, B, s_text)
+            specs["labels"] = jax.ShapeDtypeStruct((B, s_text), jnp.int32)
+        else:
+            specs["tokens"] = _token_spec(cfg, B, S)
+            if cfg.frontend == "audio":
+                specs["labels"] = jax.ShapeDtypeStruct(
+                    (B, S, cfg.num_codebooks), jnp.int32)
+            else:
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        if cfg.frontend == "vision":
+            s_text = S - cfg.num_patches
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.vit_dim), jnp.bfloat16)
+            specs["tokens"] = _token_spec(cfg, B, s_text)
+        else:
+            specs["tokens"] = _token_spec(cfg, B, S)
+        return specs
+    # decode: one new token against a primed cache of size seq_len
+    return {"tokens": _token_spec(cfg, B, 1)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Abstract KV/SSD cache for decode cells (ShapeDtypeStructs)."""
+    from ..models import lm
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len))

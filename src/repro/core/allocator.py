@@ -1,0 +1,204 @@
+"""Device allocators: structured DRA (aligned) vs legacy device-plugin.
+
+Two allocators implement the paper's two experimental arms (§V.A):
+
+* :class:`StructuredAllocator` — the KND/DRA path. Evaluates CEL
+  selectors, honours cross-request ``MatchAttribute`` constraints (e.g.
+  "NIC on the same PCI root as the GPU"), and scores candidate
+  assignments with a topology-aware objective. This is what enables the
+  *Topologically Aligned* configuration.
+
+* :class:`LegacyAllocator` — the device-plugin path: *purely
+  quantitative*. It knows only a resource name and a count and picks
+  uniformly at random among devices of that kind, blind to attributes —
+  the paper's *Topologically Unaligned (High Variance)* arm, a 1-in-8
+  lottery on an 8-GPU node.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .claims import (AllocatedDevice, AllocationResult, DeviceClass,
+                     DeviceRequest, MatchAttribute, ResourceClaim)
+from .resources import Device, DeviceRef, ResourcePool
+
+__all__ = ["AllocationError", "StructuredAllocator", "LegacyAllocator"]
+
+
+class AllocationError(Exception):
+    """No assignment satisfies the claim against the current inventory."""
+
+
+ScoreFn = Callable[[Sequence[Tuple[str, Device]]], float]
+
+
+@dataclass
+class StructuredAllocator:
+    """DRA structured-parameters allocator with backtracking search.
+
+    The search assigns devices request-by-request, checking
+    ``MatchAttribute`` constraints incrementally so violations prune
+    early. For node-scoped claims every node is tried (best-scoring
+    feasible node wins); cluster-scoped claims draw from the global pool.
+    """
+
+    pool: ResourcePool
+    classes: Mapping[str, DeviceClass]
+    score_fn: Optional[ScoreFn] = None
+    max_backtrack_steps: int = 200_000
+
+    # -- public api --------------------------------------------------------
+    def allocate(self, claim: ResourceClaim, node: Optional[str] = None) -> AllocationResult:
+        if claim.allocated:
+            raise AllocationError(f"claim {claim.name} already allocated")
+        scope = claim.spec.topology_scope
+        if scope not in ("node", "cluster"):
+            raise AllocationError(f"unknown topology_scope {scope!r}")
+
+        if scope == "node":
+            nodes = [node] if node else self.pool.nodes()
+            best: Optional[Tuple[float, str, List[Tuple[str, Device]]]] = None
+            for n in nodes:
+                assignment = self._solve(claim, node=n)
+                if assignment is None:
+                    continue
+                score = self.score_fn(assignment) if self.score_fn else 0.0
+                if best is None or score > best[0]:
+                    best = (score, n, assignment)
+            if best is None:
+                raise AllocationError(
+                    f"claim {claim.name}: no node satisfies "
+                    f"{[r.name for r in claim.spec.requests]}")
+            _, chosen_node, assignment = best
+        else:
+            assignment = self._solve(claim, node=None)
+            if assignment is None:
+                raise AllocationError(
+                    f"claim {claim.name}: cluster inventory cannot satisfy "
+                    f"{[(r.name, r.count) for r in claim.spec.requests]}")
+            chosen_node = ""
+
+        devices = [d for _, d in assignment]
+        self.pool.mark_allocated(devices, claim.uid)
+        result = AllocationResult(
+            devices=[AllocatedDevice(req, DeviceRef.of(dev)) for req, dev in assignment],
+            node=chosen_node,
+        )
+        claim.allocation = result
+        return result
+
+    def deallocate(self, claim: ResourceClaim) -> None:
+        self.pool.release(claim.uid)
+        claim.allocation = None
+        claim.prepared = False
+
+    # -- search ------------------------------------------------------------
+    def _candidates(self, req: DeviceRequest, node: Optional[str]) -> List[Device]:
+        cls = self.classes.get(req.device_class)
+        if cls is None:
+            raise AllocationError(f"unknown device class {req.device_class!r}")
+        out = []
+        for d in self.pool.devices(include_allocated=False):
+            if node is not None and d.node != node:
+                continue
+            if cls.matches(d) and req.selector_match(d):
+                out.append(d)
+        # deterministic order → deterministic allocations
+        out.sort(key=lambda d: d.id)
+        return out
+
+    def _solve(self, claim: ResourceClaim,
+               node: Optional[str]) -> Optional[List[Tuple[str, Device]]]:
+        requests = claim.spec.requests
+        constraints = claim.spec.constraints
+        cand: Dict[str, List[Device]] = {}
+        for req in requests:
+            c = self._candidates(req, node)
+            want = len(c) if req.allocation_mode == "All" else req.count
+            if len(c) < want or want == 0:
+                return None
+            cand[req.name] = c
+
+        # order requests by tightness (fewest candidates first) to fail fast
+        order: List[Tuple[DeviceRequest, int]] = []
+        for req in requests:
+            want = len(cand[req.name]) if req.allocation_mode == "All" else req.count
+            order.append((req, want))
+        order.sort(key=lambda rw: len(cand[rw[0].name]) - rw[1])
+
+        assignment: List[Tuple[str, Device]] = []
+        used: set = set()
+        steps = [0]
+
+        def ok(req_name: str, dev: Device) -> bool:
+            tentative = assignment + [(req_name, dev)]
+            return all(c.check(tentative) for c in constraints)
+
+        def dfs(ri: int, picked_for_current: int) -> bool:
+            steps[0] += 1
+            if steps[0] > self.max_backtrack_steps:
+                raise AllocationError(
+                    f"claim {claim.name}: search budget exceeded "
+                    f"({self.max_backtrack_steps} steps)")
+            if ri == len(order):
+                return True
+            req, want = order[ri]
+            if picked_for_current == want:
+                return dfs(ri + 1, 0)
+            for dev in cand[req.name]:
+                if dev.id in used:
+                    continue
+                if not ok(req.name, dev):
+                    continue
+                used.add(dev.id)
+                assignment.append((req.name, dev))
+                if dfs(ri, picked_for_current + 1):
+                    return True
+                assignment.pop()
+                used.remove(dev.id)
+            return False
+
+        if not dfs(0, 0):
+            return None
+        # restore the user's request order in the reported assignment
+        rank = {r.name: i for i, r in enumerate(requests)}
+        assignment.sort(key=lambda t: rank[t[0]])
+        return assignment
+
+
+@dataclass
+class LegacyAllocator:
+    """Device-plugin semantics: count-only, attribute-blind, random pick.
+
+    "the Device Plugin framework is purely quantitative, advertising a
+    count of resources, and is incapable of expressing the rich
+    qualitative attributes or topological relationships (like PCI
+    locality) essential for performance." (§II)
+
+    ``resource_name`` maps onto a device-class name purely so both
+    allocators draw from the same inventory; the legacy allocator never
+    looks at attributes or constraints.
+    """
+
+    pool: ResourcePool
+    classes: Mapping[str, DeviceClass]
+    rng: random.Random = field(default_factory=lambda: random.Random(0))
+
+    def allocate_count(self, resource_name: str, count: int,
+                       node: Optional[str] = None,
+                       owner_uid: str = "legacy") -> List[Device]:
+        cls = self.classes.get(resource_name)
+        if cls is None:
+            raise AllocationError(f"unknown extended resource {resource_name!r}")
+        avail = [d for d in self.pool.devices(include_allocated=False)
+                 if (node is None or d.node == node) and cls.matches(d)]
+        if len(avail) < count:
+            raise AllocationError(
+                f"extended resource {resource_name}: want {count}, have {len(avail)}")
+        avail.sort(key=lambda d: d.id)  # deterministic base order
+        picked = self.rng.sample(avail, count)  # ... then the lottery
+        self.pool.mark_allocated(picked, owner_uid)
+        return picked

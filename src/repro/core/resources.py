@@ -1,0 +1,199 @@
+"""DRA-style resource inventory: Devices, ResourceSlices, ResourcePool.
+
+Mirrors the paper's §III.A "Richer Resource Profiles": a driver can
+"publish not just the existence of a physical NIC, but also its NUMA node
+and PCI root address", and equally "model more abstract resources, such as
+an SR-IOV Virtual Function or even a provisioned network service". A
+:class:`Device` is therefore *anything* with attributes + capacity — a TPU
+chip, an ICI link, a RoCE NIC, a DCN port, or a logical network service.
+
+Discovery (DraNet workflow step 1): each node's driver produces one or
+more :class:`ResourceSlice` objects; the :class:`ResourcePool` aggregates
+slices cluster-wide and serves the allocator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+from .attributes import AttributeSet, Quantity, normalize_attr
+
+__all__ = [
+    "Device", "ResourceSlice", "ResourcePool", "DeviceRef",
+]
+
+
+@dataclass
+class Device:
+    """One allocatable device published by a driver.
+
+    ``name`` is unique within its slice's pool; the fully-qualified id is
+    ``<driver>/<pool>/<name>``.
+    """
+
+    name: str
+    attributes: AttributeSet = field(default_factory=AttributeSet)
+    capacity: Dict[str, Quantity] = field(default_factory=dict)
+
+    # Filled by the owning slice at publication time:
+    driver: str = ""
+    pool: str = ""
+    node: str = ""
+
+    def set_capacity(self, name: str, value: Any) -> "Device":
+        self.capacity[name] = Quantity.parse(value)
+        return self
+
+    @property
+    def id(self) -> str:
+        return f"{self.driver}/{self.pool}/{self.name}"
+
+    def cel_env(self) -> Dict[str, Any]:
+        """The ``device`` environment bound when evaluating selectors."""
+        return {
+            "name": self.name,
+            "driver": self.driver,
+            "pool": self.pool,
+            "node": self.node,
+            "attributes": self.attributes,
+            "capacity": dict(self.capacity),
+        }
+
+    def __repr__(self) -> str:
+        return f"Device({self.id})"
+
+
+@dataclass(frozen=True)
+class DeviceRef:
+    """A stable reference to an allocated device (claim status entry)."""
+
+    driver: str
+    pool: str
+    name: str
+    node: str
+
+    @staticmethod
+    def of(d: Device) -> "DeviceRef":
+        return DeviceRef(d.driver, d.pool, d.name, d.node)
+
+    @property
+    def id(self) -> str:
+        return f"{self.driver}/{self.pool}/{self.name}"
+
+
+@dataclass
+class ResourceSlice:
+    """A driver's inventory advertisement for one pool on one node.
+
+    DraNet workflow: "The DraNet daemon on each node discovers network
+    interfaces and their topological attributes (PCI root, NUMA node) and
+    publishes them as ResourceSlices API objects."
+    """
+
+    driver: str
+    pool: str
+    node: str
+    devices: List[Device] = field(default_factory=list)
+    generation: int = 0
+
+    def __post_init__(self) -> None:
+        for d in self.devices:
+            self._adopt(d)
+
+    def _adopt(self, d: Device) -> None:
+        d.driver = self.driver
+        d.pool = self.pool
+        d.node = self.node
+
+    def add(self, device: Device) -> "ResourceSlice":
+        self._adopt(device)
+        self.devices.append(device)
+        return self
+
+    def __iter__(self) -> Iterator[Device]:
+        return iter(self.devices)
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+
+class ResourcePool:
+    """Cluster-wide aggregation of ResourceSlices + allocation bookkeeping.
+
+    This plays the role of the scheduler's view of all published slices.
+    Allocation state lives here (not on devices) so that re-planning after
+    a node failure is just: drop the node's slices, re-run the allocator.
+    """
+
+    def __init__(self) -> None:
+        self._slices: List[ResourceSlice] = []
+        self._allocated: Dict[str, str] = {}  # device id -> claim uid
+
+    # -- publication ------------------------------------------------------
+    def publish(self, slice_: ResourceSlice) -> None:
+        # re-publication by (driver, pool, node) replaces the old slice
+        self._slices = [
+            s for s in self._slices
+            if not (s.driver == slice_.driver and s.pool == slice_.pool and s.node == slice_.node)
+        ]
+        self._slices.append(slice_)
+
+    def withdraw_node(self, node: str) -> List[ResourceSlice]:
+        """Remove all slices for a node (node failure / drain). Returns them."""
+        gone = [s for s in self._slices if s.node == node]
+        self._slices = [s for s in self._slices if s.node != node]
+        # allocations on vanished devices are implicitly broken; drop them
+        gone_ids = {d.id for s in gone for d in s}
+        self._allocated = {k: v for k, v in self._allocated.items() if k not in gone_ids}
+        return gone
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def slices(self) -> Sequence[ResourceSlice]:
+        return tuple(self._slices)
+
+    def devices(self, include_allocated: bool = False) -> List[Device]:
+        out = []
+        for s in self._slices:
+            for d in s:
+                if include_allocated or d.id not in self._allocated:
+                    out.append(d)
+        return out
+
+    def nodes(self) -> List[str]:
+        return sorted({s.node for s in self._slices})
+
+    def get(self, device_id: str) -> Optional[Device]:
+        for s in self._slices:
+            for d in s:
+                if d.id == device_id:
+                    return d
+        return None
+
+    def is_allocated(self, device_id: str) -> bool:
+        return device_id in self._allocated
+
+    def owner(self, device_id: str) -> Optional[str]:
+        return self._allocated.get(device_id)
+
+    # -- allocation bookkeeping --------------------------------------------
+    def mark_allocated(self, devices: Iterable[Device], claim_uid: str) -> None:
+        for d in devices:
+            if d.id in self._allocated:
+                raise ValueError(f"device {d.id} already allocated to "
+                                 f"{self._allocated[d.id]}")
+            self._allocated[d.id] = claim_uid
+
+    def release(self, claim_uid: str) -> int:
+        before = len(self._allocated)
+        self._allocated = {k: v for k, v in self._allocated.items() if v != claim_uid}
+        return before - len(self._allocated)
+
+    def utilization(self) -> Tuple[int, int]:
+        total = sum(len(s) for s in self._slices)
+        return len(self._allocated), total
+
+    def __repr__(self) -> str:
+        a, t = self.utilization()
+        return f"ResourcePool(slices={len(self._slices)}, allocated={a}/{t})"

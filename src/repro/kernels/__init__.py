@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+The paper itself is a control-plane contribution (no kernel-level claims)
+so these kernels serve the *framework*: flash attention (GQA/causal/SWA),
+the Mamba-2 SSD intra-chunk kernel, and a fused RMSNorm. Each directory
+has <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd wrapper) and
+ref.py (pure-jnp oracle); validated with interpret=True on CPU.
+"""

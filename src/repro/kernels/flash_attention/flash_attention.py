@@ -1,0 +1,135 @@
+"""Blocked online-softmax attention (FlashAttention) for TPU via Pallas.
+
+TPU-native design decisions (vs a CUDA port):
+  * block shapes are (128, head_dim) multiples — MXU systolic tiles;
+  * the KV loop is the innermost GRID dimension with VMEM scratch
+    accumulators persisting across grid steps (Pallas TPU "revisiting"
+    semantics) instead of an in-kernel sequential loop — lets the
+    pipeline overlap HBM->VMEM block DMA with MXU compute;
+  * softmax statistics (m, l) are kept 2D (block_q, 1) f32 in VMEM —
+    TPU vector units operate on 2D tiles, 1D iotas are not supported;
+  * causal + sliding-window masks are applied via block-level skip
+    predicates (pl.when) so fully-masked blocks cost no FLOPs.
+
+Supports GQA natively: the kv head for q-head h is h // (H // K).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, nk: int, seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level skip: entirely-future (causal) or entirely-pre-window
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_len                        # padded keys
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window > 0:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (block_q, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,d); k,v: (B,S,K,d) -> (B,S,H,d)."""
+    B, S, H, d = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(S, 16))
+    block_k = min(block_k, max(S, 16))
+    pad = (-S) % block_q
+    pad_k = (-S) % block_k
+    Sq = S + pad
+    Sk = S + pad_k
+    qt = jnp.pad(q.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kt = jnp.pad(k.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vt = jnp.pad(v.transpose(0, 2, 1, 3), ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    nq = Sq // block_q
+    nk = Sk // block_k
+    grid = (B * H, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk, seq_len=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bh, qi, ki: (bh // H, (bh % H) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bh, qi, ki: (bh // H, bh % H, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m: running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l: running denom
+            pltpu.VMEM((block_q, d), jnp.float32),   # acc: unnormalized out
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out[:, :, :S].transpose(0, 2, 1, 3)

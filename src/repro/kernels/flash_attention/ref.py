@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B,S,H,d); k,v: (B,S,K,d) -> (B,S,H,d). f32 softmax."""
+    B, S, H, d = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, d)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, d).astype(q.dtype)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .rmsnorm import rmsnorm_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    return rmsnorm_fwd(x, scale, eps, interpret=not _on_tpu())

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the fused RMSNorm kernel."""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper for the SSD chunk kernel (interpret mode off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from .ssd_scan import ssd_chunk_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_chunk(C, B, x, dt, da):
+    return ssd_chunk_fwd(C, B, x, dt, da, interpret=not _on_tpu())

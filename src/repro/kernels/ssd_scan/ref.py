@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(t: jax.Array) -> jax.Array:
+    Q = t.shape[-1]
+    c = jnp.cumsum(t, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    ii, jj = jnp.arange(Q)[:, None], jnp.arange(Q)[None, :]
+    return jnp.where(ii >= jj, out, -jnp.inf)
+
+
+def ssd_chunk_ref(C, B, x, dt, da):
+    """C,B: (b,nc,Q,N); x: (b,nc,Q,H,P); dt,da: (b,nc,Q,H).
+
+    Returns y_diag (b,nc,Q,H,P), states (b,nc,H,N,P), decays (b,nc,H)
+    (all f32) — identical contract to ssd_scan.ssd_chunk_fwd.
+    """
+    Cf = C.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    da = da.astype(jnp.float32)
+
+    L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))               # (b,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)[:, :, None] * L
+    y = jnp.einsum("bchqk,bckhp->bcqhp", scores, xdt)
+
+    cum = jnp.cumsum(da, axis=2)                                  # (b,nc,Q,H)
+    total = cum[:, :, -1]                                         # (b,nc,H)
+    decay_to_end = jnp.exp(total[:, :, None] - cum)               # (b,nc,Q,H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", Bf, decay_to_end, xdt)
+    return y, states, jnp.exp(total)

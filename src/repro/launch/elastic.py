@@ -1,0 +1,105 @@
+"""Elastic re-planning: node failure -> re-claim -> re-plan -> resume.
+
+The KND payoff for fault tolerance (DESIGN.md §2): the inventory is
+declarative, so when a node dies the controller just withdraws its
+ResourceSlices, re-solves the *same claim spec* against the survivors,
+re-plans the mesh (possibly smaller), and resumes from the newest
+committed checkpoint. No imperative per-node reconfiguration — the exact
+contrast to the CNI-daemon lifecycle fragility of §II.
+
+Straggler mitigation rides the same path: a STRAGGLER_DETECTED event on
+the bus can be escalated by policy to treat the slow host as failed.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .. import core
+from ..core.nri import Event, Events
+from ..topology.tpu import TpuCluster
+
+__all__ = ["ElasticController", "largest_mesh_shape"]
+
+
+def largest_mesh_shape(n_chips: int, model_axis: int) -> Tuple[int, int]:
+    """Biggest (data, model) grid with the model axis preserved.
+
+    Keeping the model axis intact means parameter shardings stay valid
+    (only the data/batch axis shrinks), so a restore-and-resume needs no
+    resharding logic beyond what jit does on input.
+    """
+    data = n_chips // model_axis
+    if data < 1:
+        raise ValueError(f"{n_chips} chips cannot host model axis {model_axis}")
+    # round data down to a power of two for torus folding friendliness
+    data = 2 ** int(math.floor(math.log2(data)))
+    return data, model_axis
+
+
+@dataclass
+class ElasticController:
+    """Owns the claim lifecycle across failures."""
+
+    cluster: TpuCluster
+    registry: core.DriverRegistry
+    model_axis: int = 4
+    placement: str = "aligned"
+    # populated by plan()
+    claim: Optional[core.ResourceClaim] = None
+    plan: Optional[core.MeshPlan] = None
+    events: List[str] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.planner = core.MeshPlanner(self.cluster)
+        self.allocator = core.StructuredAllocator(self.registry.pool,
+                                                  self.registry.classes)
+        self.registry.bus.subscribe(Events.NODE_FAILED, self.on_node_failed,
+                                    "elastic-controller")
+        self.registry.bus.subscribe(Events.STRAGGLER_DETECTED,
+                                    self.on_straggler, "elastic-controller")
+
+    # -- initial plan -------------------------------------------------------
+    def plan_mesh(self, n_chips: Optional[int] = None) -> core.MeshPlan:
+        avail = len(self.registry.pool.devices())
+        n = n_chips or avail
+        data, model = largest_mesh_shape(n, self.model_axis)
+        n = data * model
+        self.claim = self.planner.make_claim("train", n)
+        self.allocator.allocate(self.claim)
+        self.registry.prepare(self.claim)
+        axes = [core.AxisSpec("data", data, "y"),
+                core.AxisSpec("model", model, "x")]
+        self.plan = self.planner.plan(axes, self.placement, self.claim)
+        self.events.append(f"planned {data}x{model}")
+        return self.plan
+
+    # -- failure handling -----------------------------------------------------
+    def on_node_failed(self, event: Event) -> Dict[str, Any]:
+        node = event.context["node"]
+        self.events.append(f"node_failed {node}")
+        # 1. withdraw the node's slices (breaks its allocations)
+        self.registry.pool.withdraw_node(node)
+        # 2. release whatever the old claim still holds
+        if self.claim is not None:
+            self.allocator.deallocate(self.claim)
+        # 3. re-solve on the survivors
+        plan = self.plan_mesh()
+        self.registry.bus.publish(Events.JOB_RESUMED,
+                                  plan=plan, reason=f"lost {node}")
+        return {"replanned": plan.summary()}
+
+    def on_straggler(self, event: Event) -> Optional[Dict[str, Any]]:
+        # policy: persistent stragglers are treated as failures; the
+        # telemetry driver publishes the event, we count strikes per host
+        step = event.context.get("step")
+        self.events.append(f"straggler at step {step}")
+        return None
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def mesh_shape(self) -> Tuple[int, ...]:
+        assert self.plan is not None
+        return self.plan.axis_shape

@@ -1,0 +1,67 @@
+"""Production meshes + the KND-planned mesh path.
+
+``make_production_mesh`` is the raw jax mesh required by the dry-run
+contract. ``make_planned_mesh`` is the KND path: discovery -> claim ->
+allocation -> plan -> OCI attachment; it returns the same mesh *plus* the
+MeshPlan carrying placement dilation metadata (consumed by the roofline's
+collective term).
+
+NOTE: importing this module never touches jax device state; all meshes
+are built inside functions (dry-run sets XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+__all__ = ["make_production_mesh", "make_planned_mesh", "mesh_axis_specs"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=axis_types)
+
+
+def mesh_axis_specs(multi_pod: bool = False):
+    """AxisSpec list for the planner matching the production mesh."""
+    from ..core.planner import AxisSpec
+    if multi_pod:
+        return [AxisSpec("pod", 2, "pod"), AxisSpec("data", 16, "y"),
+                AxisSpec("model", 16, "x")]
+    return [AxisSpec("data", 16, "y"), AxisSpec("model", 16, "x")]
+
+
+def make_planned_mesh(*, multi_pod: bool = False, placement: str = "aligned",
+                      seed: int = 0):
+    """Full KND workflow -> (jax.Mesh, MeshPlan).
+
+    Discovery publishes slices; a cluster-scoped claim is allocated by the
+    structured allocator; the planner embeds the logical axes into the ICI
+    torus; the OCI runtime executes the declarative attachment.
+    """
+    from .. import core
+    from ..topology.tpu import build_tpu_cluster
+
+    num_pods = 2 if multi_pod else 1
+    cluster = build_tpu_cluster(num_pods=num_pods)
+    reg = core.DriverRegistry()
+    reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
+    reg.run_discovery()
+
+    planner = core.MeshPlanner(cluster)
+    n_chips = 512 if multi_pod else 256
+    claim = planner.make_claim(f"mesh-{placement}", n_chips)
+    allocator = core.StructuredAllocator(reg.pool, reg.classes)
+    allocator.allocate(claim)
+    reg.prepare(claim)
+
+    plan = planner.plan(mesh_axis_specs(multi_pod), placement, claim, seed=seed)
+    results = reg.bus.publish(core.Events.RUN_POD_SANDBOX, plan=plan, claim=claim)
+    spec = next(r.value for r in results
+                if r.ok and r.value is not None and r.driver == "dranet.repro.dev")
+    runtime = core.MeshRuntime()
+    mesh = runtime.execute(spec)
+    return mesh, plan

@@ -1,0 +1,3 @@
+from .config import ModelConfig
+from .modules import Builder, Mode
+from . import layers, lm, registry  # noqa: F401

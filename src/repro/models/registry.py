@@ -1,0 +1,5 @@
+"""Convenience re-export: model registry lives in repro.configs."""
+
+from ..configs.registry import ARCHS, get_config, smoke_config
+
+__all__ = ["ARCHS", "get_config", "smoke_config"]

@@ -1,0 +1,2 @@
+from .sharding import (ShardingRules, constrain, current_rules, param_shardings,
+                       use_rules, logical_to_pspec)

@@ -1,0 +1,2 @@
+from .hlo import collective_bytes_by_kind, collective_bytes_by_axis_kind
+from .analysis import roofline_terms, RooflineReport

@@ -1,0 +1,121 @@
+"""Three-term roofline from dry-run artifacts (DESIGN.md §6).
+
+  compute    = HLO_FLOPs / (chips x peak)        [197 TFLOP/s bf16 / chip]
+  memory     = HLO_bytes / (chips x HBM_bw)      [819 GB/s / chip]
+  collective = sum over axes of
+                 bytes_axis x dilation(axis) / link_bw(axis class)
+               [ICI ~50 GB/s/link x 2 directions; DCN 25 GB/s/host]
+
+cost_analysis() of the partitioned module reports PER-DEVICE flops/bytes
+(SPMD: one program per device), so chips-normalization is already done;
+we therefore use the values directly. The placement-dependent *dilation*
+multiplier is where the paper's aligned-vs-unaligned physics enters.
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per train step; the
+ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat & dispatch waste.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from ..topology.tpu import DCN_HOST_BW, HBM_BW, ICI_BW, PEAK_BF16_TFLOPS
+
+__all__ = ["roofline_terms", "RooflineReport"]
+
+PEAK_FLOPS = PEAK_BF16_TFLOPS * 1e12
+HBM_BPS = HBM_BW * 1e9
+ICI_BPS = ICI_BW * 1e9 * 2        # bidirectional ring
+DCN_BPS = DCN_HOST_BW * 1e9 / 4   # 4 chips share a host NIC
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    per_device_gib: float
+    details: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def no_overlap_step_s(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization upper bound at the roofline step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        chips = self.details.get("devices", 1)
+        return self.model_flops / (self.step_time_s * chips * PEAK_FLOPS)
+
+
+def _model_flops(record: Dict[str, Any], tokens: int) -> float:
+    n = record.get("active_params") or record.get("params", 0)
+    if record.get("kind") == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens  # inference fwd only
+
+
+def roofline_terms(record: Dict[str, Any],
+                   dilation: Optional[Dict[str, float]] = None,
+                   axis_sizes: Optional[Dict[str, int]] = None
+                   ) -> RooflineReport:
+    """record: one dry-run JSON cell (status == ok)."""
+    assert record["status"] == "ok", record
+    devices = record["devices"]
+    compute_s = record["flops"] / PEAK_FLOPS
+    memory_s = record["hlo_bytes"] / HBM_BPS
+
+    # collective: per-kind bytes are per-device payloads of each op
+    coll = record.get("collectives", {})
+    dil = max((dilation or {"": 1.0}).values())
+    coll_ici = 0.0
+    coll_dcn = 0.0
+    by_axis = record.get("collectives_by_axis")
+    if by_axis:
+        for label, kinds in by_axis.items():
+            total = sum(kinds.values())
+            if label.startswith("pod") or label == "pod":
+                coll_dcn += total
+            else:
+                coll_ici += total
+    else:
+        coll_ici = sum(coll.values())
+    collective_s = coll_ici * dil / ICI_BPS + coll_dcn / DCN_BPS
+
+    if record.get("kind") == "train":
+        shape_tokens = {"train_4k": 4096 * 256}.get(record["shape"], 0)
+    elif record.get("kind") == "prefill":
+        shape_tokens = {"prefill_32k": 32768 * 32}.get(record["shape"], 0)
+    else:
+        bsz = {"decode_32k": 128, "long_500k": 1}.get(record["shape"], 1)
+        shape_tokens = bsz  # one token per sequence
+    model_flops = _model_flops(record, shape_tokens)
+    hlo_total = record["flops"] * devices
+    useful = model_flops / hlo_total if hlo_total else 0.0
+
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)  # type: ignore[arg-type]
+    return RooflineReport(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops,
+        hlo_flops_total=hlo_total, useful_ratio=useful,
+        per_device_gib=record["memory"]["per_device_bytes"] / 2**30,
+        details={"devices": devices, "collectives": coll,
+                 "dilation": dilation or {}},
+    )

@@ -1,0 +1,126 @@
+"""Parse collective ops + operand bytes out of compiled HLO text.
+
+cost_analysis() has FLOPs and memory bytes but NOT collective traffic, so
+we sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute in the (SPMD-partitioned) module.
+
+Notes on conventions:
+* Sizes are PER-DEVICE payload bytes (the partitioned module is the
+  per-device program) — exactly what the link-bandwidth roofline wants.
+* ``replica_groups`` are parsed so traffic can be attributed to a mesh
+  axis by group size (e.g. groups of 16 on a (16,16) mesh are intra-pod
+  rings; groups of 2 on (2,16,16) are the DCN pod axis).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["collective_bytes_by_kind", "collective_bytes_by_axis_kind",
+           "parse_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+# e.g.:  %ag = bf16[16,1024,128]{...} all-gather(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[0-9,]*\][^\s]*))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> Optional[int]:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},")[0].strip("{}")
+        if not first:
+            return None
+        return len(first.split(","))
+    return None
+
+
+def parse_collectives(hlo_text: str) -> List[Tuple[str, int, Optional[int]]]:
+    """[(kind, output_bytes, group_size)] for every collective op.
+
+    '-done' ops are skipped (their '-start' counterpart carries the
+    shape); fusions inside called computations are included since HLO
+    text contains all computations.
+    """
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str = m.group(1) or m.group(2) or ""
+        kind = m.group(3)
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        out.append((kind, nbytes, _group_size(line)))
+    return out
+
+
+def collective_bytes_by_kind(hlo_text: str) -> Dict[str, float]:
+    acc: Dict[str, float] = defaultdict(float)
+    for kind, nbytes, _ in parse_collectives(hlo_text):
+        acc[kind] += nbytes
+    return dict(acc)
+
+
+def collective_bytes_by_axis_kind(hlo_text: str,
+                                  axis_sizes: Dict[str, int]
+                                  ) -> Dict[str, Dict[str, float]]:
+    """{axis_name: {kind: bytes}} attributing ops to axes by group size.
+
+    Ambiguity (two axes of equal size, e.g. data=16 and model=16) is
+    resolved as 'axis_or' buckets — the roofline treats them with the
+    same link class anyway (both ICI); the DCN 'pod' axis size (2) is
+    unambiguous, which is what matters.
+    """
+    by_size: Dict[int, List[str]] = defaultdict(list)
+    for name, size in axis_sizes.items():
+        by_size[size].append(name)
+    out: Dict[str, Dict[str, float]] = defaultdict(lambda: defaultdict(float))
+    for kind, nbytes, gsize in parse_collectives(hlo_text):
+        if gsize is not None and gsize in by_size:
+            label = "|".join(by_size[gsize])
+        elif gsize is None:
+            label = "unknown"
+        else:
+            # group spanning multiple axes (e.g. 256 = data x model)
+            label = f"span{gsize}"
+        out[label][kind] += nbytes
+    return {k: dict(v) for k, v in out.items()}

@@ -1,0 +1,1 @@
+from . import fabric, gcp, netsim, tpu  # noqa: F401

@@ -1,0 +1,3 @@
+from .optimizer import AdamW, Adafactor, Optimizer
+from .schedule import cosine_schedule, constant_schedule
+from .train_step import TrainState, make_train_step

@@ -1,0 +1,165 @@
+"""Optimizers from scratch: AdamW and Adafactor (factored, for 100B+).
+
+State dtype policy: params may be bf16; optimizer accumulators are fp32.
+Adafactor's factored second moment keeps state ~O(rows+cols) per matrix,
+which is what lets arctic-480b / grok-314b / qwen-110b fit v5e HBM (see
+EXPERIMENTS.md §Dry-run memory table).
+
+Each optimizer also exposes ``state_specs(param_specs, abstract_params)``
+mapping parameter logical-axis trees to state logical-axis trees so the
+launcher shards optimizer state exactly like (or reduced from) its
+parameter.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+__all__ = ["Optimizer", "AdamW", "Adafactor", "global_norm",
+           "clip_by_global_norm"]
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Tuple[Params, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def _zip_apply(params: Params, fn: Callable, *trees: Any) -> List[Any]:
+    """Apply fn leafwise where ``trees`` may be deeper than params."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flats = [treedef.flatten_up_to(t) for t in trees]
+    return treedef, [fn(p, *xs) for p, *xs in zip(flat_p, *flats)]
+
+
+class Optimizer:
+    name = "optimizer"
+
+    def init(self, params: Params) -> Any:
+        raise NotImplementedError
+
+    def update(self, params: Params, grads: Params, state: Any,
+               step: jax.Array) -> Tuple[Params, Any]:
+        raise NotImplementedError
+
+    def state_specs(self, param_specs: Any, abstract_params: Any) -> Any:
+        raise NotImplementedError
+
+
+@dataclass
+class AdamW(Optimizer):
+    learning_rate: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    name: str = "adamw"
+
+    def init(self, params: Params) -> Any:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params), "v": jax.tree.map(f32, params)}
+
+    def update(self, params, grads, state, step):
+        lr = self.learning_rate(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = self.b1 * m + (1 - self.b1) * g32
+            v = self.b2 * v + (1 - self.b2) * g32 * g32
+            step_ = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/bias excluded)
+                step_ = step_ + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+        treedef, outs = _zip_apply(params, upd, grads, state["m"], state["v"])
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        new_v = treedef.unflatten([o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v}
+
+    def state_specs(self, param_specs: Any, abstract_params: Any) -> Any:
+        return {"m": param_specs, "v": param_specs}
+
+
+@dataclass
+class Adafactor(Optimizer):
+    """Factored Adafactor (Shazeer & Stern, 2018), momentum-free."""
+
+    learning_rate: Schedule
+    decay: float = 0.8        # beta2 schedule: 1 - t^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+    name: str = "adafactor"
+
+    def _factored(self, shape) -> bool:
+        return (len(shape) >= 2 and shape[-1] >= self.min_dim_size_to_factor
+                and shape[-2] >= self.min_dim_size_to_factor)
+
+    def init(self, params: Params) -> Any:
+        def mk(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"acc": jax.tree.map(mk, params)}
+
+    def update(self, params, grads, state, step):
+        lr = self.learning_rate(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-self.decay)
+
+        def upd(p, g, acc):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + self.eps
+            if "vr" in acc:
+                vr = beta2 * acc["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * acc["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), self.eps)
+                         )[..., None] * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(denom, self.eps))
+                new_acc = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * acc["v"] + (1 - beta2) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, self.eps))
+                new_acc = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            p32 = p.astype(jnp.float32)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * p32
+            return (p32 - lr * u).astype(p.dtype), new_acc
+
+        treedef, outs = _zip_apply(params, upd, grads, state["acc"])
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_acc = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"acc": new_acc}
+
+    def state_specs(self, param_specs: Any, abstract_params: Any) -> Any:
+        flat_p, treedef = jax.tree.flatten(abstract_params)
+        flat_s = treedef.flatten_up_to(param_specs)
+        out = []
+        for p, axes in zip(flat_p, flat_s):
+            if self._factored(p.shape):
+                out.append({"vr": tuple(axes[:-1]),
+                            "vc": tuple(axes[:-2]) + (axes[-1],)})
+            else:
+                out.append({"v": tuple(axes)})
+        return {"acc": treedef.unflatten(out)}

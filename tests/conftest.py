@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Keep the default test process single-device (the dry-run sets its own
+# 512-device flag in a dedicated process; multi-device tests subprocess).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

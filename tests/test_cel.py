@@ -1,0 +1,115 @@
+"""CEL-subset engine: semantics, errors, and property-based checks."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.attributes import AttributeSet, Quantity, Version
+from repro.core.cel import CelError, compile_expr, evaluate
+
+
+@pytest.fixture
+def device_env():
+    return {"device": {
+        "attributes": AttributeSet.of({
+            "repro.dev/pciRoot": "pci0000:85",
+            "repro.dev/numa": 1,
+            "repro.dev/rdma": True,
+            "repro.dev/driverVersion": Version.parse("2.3.1"),
+        }),
+        "capacity": {"hbm": Quantity.parse("16Gi"),
+                     "bandwidth": Quantity.parse("50G")},
+    }}
+
+
+class TestSemantics:
+    def test_attribute_access_full_and_short(self, device_env):
+        assert evaluate('device.attributes["repro.dev/rdma"]', device_env) is True
+        assert evaluate('device.attributes.rdma', device_env) is True
+
+    def test_pci_root_selector(self, device_env):
+        # the paper's canonical selector shape: same-PCI-root alignment
+        assert evaluate('device.attributes.pciRoot.startsWith("pci0000")',
+                        device_env)
+
+    def test_quantity_comparison(self, device_env):
+        assert evaluate('device.capacity["hbm"] >= "8Gi"', device_env)
+        assert not evaluate('device.capacity["hbm"] >= "32Gi"', device_env)
+
+    def test_version_comparison(self, device_env):
+        assert evaluate('device.attributes.driverVersion >= semver("2.0")',
+                        device_env)
+
+    def test_has_macro(self, device_env):
+        assert evaluate('has(device.attributes.rdma)', device_env)
+        assert not evaluate('has(device.attributes.nonexistent)', device_env)
+
+    def test_list_macros(self):
+        assert evaluate('[1,2,3].exists(x, x > 2)')
+        assert evaluate('[1,2,3].all(x, x > 0)')
+        assert evaluate('[1,2,3,4].filter(x, x % 2 == 0)') == [2, 4]
+        assert evaluate('[1,2].map(x, x * 10)') == [10, 20]
+
+    def test_ternary_and_logic(self, device_env):
+        assert evaluate('device.attributes.numa == 1 ? "a" : "b"',
+                        device_env) == "a"
+        assert evaluate('false || true')
+        assert not evaluate('false && true')
+
+    def test_short_circuit(self):
+        # RHS would error if evaluated
+        assert evaluate('true || undefined_var > 1') is True
+        assert evaluate('false && undefined_var > 1') is False
+
+    def test_arithmetic_precedence(self):
+        assert evaluate('1 + 2 * 3') == 7
+        assert evaluate('(1 + 2) * 3') == 9
+        assert evaluate('7 / 2') == 3       # int division
+        assert evaluate('7.0 / 2') == 3.5
+
+    def test_in_operator(self):
+        assert evaluate('"roce" in ["rdma", "roce"]')
+        assert not evaluate('5 in [1, 2]')
+
+    def test_string_functions(self):
+        assert evaluate('size("abc") == 3')
+        assert evaluate('"gpu0rdma0".matches("gpu[0-9]+rdma[0-9]+")')
+        assert evaluate('"abc".contains("b")')
+        assert evaluate('"abc".endsWith("bc")')
+
+
+class TestErrors:
+    @pytest.mark.parametrize("expr", [
+        "device.nope", "1 +", "foo()", '"a" && true', "[1,2", "a.b.(",
+        "1 ? 2 : ", "exists(x)",
+    ])
+    def test_bad_expressions_raise(self, expr, device_env):
+        with pytest.raises(CelError):
+            evaluate(expr, device_env)
+
+    def test_selector_must_be_bool(self):
+        with pytest.raises(CelError):
+            compile_expr("1 + 1").evaluate_bool({})
+
+
+class TestProperties:
+    @given(st.integers(-10**6, 10**6), st.integers(-10**6, 10**6))
+    @settings(max_examples=50, deadline=None)
+    def test_comparison_consistent(self, a, b):
+        assert evaluate(f"{a} < {b}") == (a < b)
+        assert evaluate(f"{a} == {b}") == (a == b)
+
+    @given(st.lists(st.integers(0, 100), min_size=0, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_size_matches_len(self, xs):
+        assert evaluate(f"size({xs})") == len(xs)
+
+    @given(st.lists(st.integers(-50, 50), min_size=1, max_size=8),
+           st.integers(-50, 50))
+    @settings(max_examples=50, deadline=None)
+    def test_exists_matches_any(self, xs, t):
+        assert evaluate(f"{xs}.exists(v, v > {t})") == any(v > t for v in xs)
+
+    @given(st.text(alphabet="abcXYZ019", max_size=12))
+    @settings(max_examples=50, deadline=None)
+    def test_string_roundtrip(self, s):
+        assert evaluate(f'"{s}" == "{s}"')

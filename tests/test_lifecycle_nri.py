@@ -1,0 +1,69 @@
+"""Startup pipelines (Table I) + NRI bus semantics."""
+
+import pytest
+
+from repro.core.lifecycle import STARTUP_ARMS, percentiles, simulate
+from repro.core.nri import EventBus, Events
+
+
+class TestTableI:
+    def test_knd_percentiles_match_paper(self):
+        """Table I: P50=1.8, P90=2.1, P99=2.3 (±0.15 s calibration)."""
+        pct = percentiles(simulate(STARTUP_ARMS["knd"](), 100, seed=42))
+        assert abs(pct[50] - 1.8) < 0.15, pct
+        assert abs(pct[90] - 2.1) < 0.15, pct
+        assert abs(pct[99] - 2.3) < 0.2, pct
+
+    def test_knd_fastest_and_tightest(self):
+        res = {name: percentiles(simulate(mk(), 1000, seed=7))
+               for name, mk in STARTUP_ARMS.items()}
+        assert res["knd"][50] < res["cni"][50] < res["cni+device-plugin"][50]
+        # tail behaviour: the legacy arms have apiserver/daemon hazards
+        knd_spread = res["knd"][99] / res["knd"][50]
+        dp_spread = res["cni+device-plugin"][99] / res["cni+device-plugin"][50]
+        assert knd_spread < 1.5
+        assert dp_spread > 2.0
+
+    def test_architectural_simplicity(self):
+        """Fig. 5 vs Fig. 6: fewer components, no API calls on path."""
+        knd = STARTUP_ARMS["knd"]()
+        legacy = STARTUP_ARMS["cni+device-plugin"]()
+        assert knd.apiserver_calls_on_path == 0
+        assert legacy.apiserver_calls_on_path >= 4
+        assert len(knd.components) < len(legacy.components)
+        assert knd.critical_steps < legacy.critical_steps
+
+
+class TestEventBus:
+    def test_parallel_independent_dispatch(self):
+        bus = EventBus(parallel=True)
+        seen = []
+        bus.subscribe(Events.RUN_POD_SANDBOX, lambda e: seen.append("a") or "a", "drv-a")
+        bus.subscribe(Events.RUN_POD_SANDBOX, lambda e: seen.append("b") or "b", "drv-b")
+        results = bus.publish(Events.RUN_POD_SANDBOX, pod="p0")
+        assert {r.value for r in results} == {"a", "b"}
+        assert all(r.ok for r in results)
+
+    def test_failure_isolation(self):
+        bus = EventBus()
+        bus.subscribe(Events.CREATE_CONTAINER, lambda e: 1 / 0, "bad")
+        bus.subscribe(Events.CREATE_CONTAINER, lambda e: "fine", "good")
+        results = bus.publish(Events.CREATE_CONTAINER)
+        ok = {r.driver: r.ok for r in results}
+        assert ok == {"bad": False, "good": True}
+        assert len(bus.failures()) == 1
+
+    def test_context_awareness(self):
+        """Hooks receive full context — no callback to the control plane."""
+        bus = EventBus()
+        got = {}
+        bus.subscribe(Events.NODE_PREPARE_RESOURCES,
+                      lambda e: got.update(e.context), "drv")
+        bus.publish(Events.NODE_PREPARE_RESOURCES, claim="c1", config={"mtu": 9000})
+        assert got["claim"] == "c1" and got["config"]["mtu"] == 9000
+
+    def test_unsubscribe_driver(self):
+        bus = EventBus()
+        bus.subscribe(Events.STEP_END, lambda e: "x", "gone")
+        bus.unsubscribe_driver("gone")
+        assert bus.publish(Events.STEP_END) == []

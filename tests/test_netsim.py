@@ -1,0 +1,93 @@
+"""Network simulator: Tables II/III reproduction + TPU ring model."""
+
+import pytest
+
+from repro.topology.gcp import build_a4_cluster, dma_path_bw
+from repro.topology.netsim import (NcclModel, ring_collective_time,
+                                   run_lottery)
+
+# Paper Tables II & III: (collective, bytes) -> (aligned mean, aligned std,
+#                                                unaligned mean, unaligned std)
+PAPER = {
+    ("all_gather", 65536): (1.29, 0.02, 1.16, 0.06),
+    ("all_gather", 1 << 20): (11.42, 0.19, 8.98, 0.95),
+    ("all_gather", 8 << 30): (46.59, 0.03, 29.20, 5.62),
+    ("all_reduce", 65536): (1.53, 0.03, 1.21, 0.11),
+    ("all_reduce", 1 << 20): (14.11, 0.13, 10.39, 2.60),
+    ("all_reduce", 8 << 30): (46.93, 0.04, 29.68, 6.74),
+}
+
+
+@pytest.fixture(scope="module")
+def model():
+    fab, nodes = build_a4_cluster(2)
+    return NcclModel(fab), nodes
+
+
+class TestDmaTiers:
+    def test_tier_structure(self, model):
+        m, nodes = model
+        # gpu0+nic0 same switch; gpu1+nic0 same socket; gpu4+nic0 cross
+        _, _, t0 = dma_path_bw(m.fabric, nodes[0].gpus[0], nodes[0].nics[0])
+        _, _, t1 = dma_path_bw(m.fabric, nodes[0].gpus[1], nodes[0].nics[0])
+        _, _, t2 = dma_path_bw(m.fabric, nodes[0].gpus[4], nodes[0].nics[0])
+        assert (t0, t1, t2) == (0, 1, 2)
+
+    def test_tier_counts_per_node(self, model):
+        """1 aligned + 3 same-socket + 4 cross-socket — the 1-in-8 lottery."""
+        m, nodes = model
+        tiers = [dma_path_bw(m.fabric, g, nodes[0].nics[0])[2]
+                 for g in nodes[0].gpus]
+        assert sorted(tiers) == [0, 1, 1, 1, 2, 2, 2, 2]
+
+
+class TestPaperTables:
+    @pytest.mark.parametrize("coll,size", list(PAPER))
+    def test_aligned_matches_paper(self, model, coll, size):
+        m, nodes = model
+        r = run_lottery(m, nodes, coll, size, aligned=True, seed=1)
+        want = PAPER[(coll, size)][0]
+        assert abs(r.mean - want) / want < 0.02, (r.mean, want)
+
+    @pytest.mark.parametrize("coll,size", list(PAPER))
+    def test_unaligned_prediction_within_10pct(self, model, coll, size):
+        m, nodes = model
+        r = run_lottery(m, nodes, coll, size, aligned=False, seed=2)
+        want = PAPER[(coll, size)][2]
+        assert abs(r.mean - want) / want < 0.10, (r.mean, want)
+
+    def test_variance_collapse(self, model):
+        """§V.C headline: aligned collapses the std dev."""
+        m, nodes = model
+        a = run_lottery(m, nodes, "all_gather", 8 << 30, aligned=True, seed=1)
+        u = run_lottery(m, nodes, "all_gather", 8 << 30, aligned=False, seed=2)
+        assert a.std < 0.15
+        assert u.std > 3.0
+
+    def test_headline_gains(self, model):
+        """+59.6% all-gather / +58.1% all-reduce at 8 GB (paper §VI)."""
+        m, nodes = model
+        for coll, paper_gain in [("all_gather", 59.6), ("all_reduce", 58.1)]:
+            a = run_lottery(m, nodes, coll, 8 << 30, aligned=True, seed=1)
+            u = run_lottery(m, nodes, coll, 8 << 30, aligned=False, seed=2)
+            gain = 100 * (a.mean - u.mean) / u.mean
+            assert abs(gain - paper_gain) < 10, (coll, gain)
+
+
+class TestTpuRings:
+    def test_dilation_scales_time(self):
+        t1 = ring_collective_time("all_gather", 1 << 30, 16, dilation_mean=1.0)
+        t8 = ring_collective_time("all_gather", 1 << 30, 16, dilation_mean=8.0)
+        assert 7.5 < t8 / t1 < 8.5
+
+    def test_all_reduce_twice_all_gather(self):
+        ag = ring_collective_time("all_gather", 1 << 30, 16)
+        ar = ring_collective_time("all_reduce", 1 << 30, 16)
+        assert 1.8 < ar / ag < 2.2
+
+    def test_axis_size_one_is_free(self):
+        assert ring_collective_time("all_reduce", 1 << 30, 1) == 0.0
+
+    def test_unknown_collective_raises(self):
+        with pytest.raises(ValueError):
+            ring_collective_time("gossip", 1024, 4)

@@ -1,0 +1,105 @@
+"""MeshPlanner: alignment physics, folded rings, attachment validity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AxisSpec, DriverRegistry, IciDriver, MeshPlanner, \
+    StructuredAllocator, TpuDriver, folded_order
+from repro.topology.netsim import random_permutation_dilation
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster, ring_dilation
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return build_tpu_cluster(num_pods=2)
+
+
+@pytest.fixture(scope="module")
+def planner(cluster):
+    return MeshPlanner(cluster)
+
+
+class TestFoldedOrder:
+    @given(st.integers(2, 64))
+    @settings(max_examples=40, deadline=None)
+    def test_is_permutation_with_bounded_steps(self, n):
+        fo = folded_order(n)
+        assert sorted(fo) == list(range(n))
+        for i in range(n):
+            assert abs(fo[i] - fo[(i + 1) % n]) <= 2
+
+
+class TestAlignment:
+    def test_aligned_full_axes_dilation_one(self, planner):
+        plan = planner.plan([AxisSpec("data", 16, "y"),
+                             AxisSpec("model", 16, "x")], "aligned")
+        assert plan.dilation["data"] == (1.0, 1)
+        assert plan.dilation["model"] == (1.0, 1)
+
+    def test_aligned_partial_axis_dilation_le_two(self, planner):
+        plan = planner.plan([AxisSpec("data", 4, "y"),
+                             AxisSpec("model", 8, "x")], "aligned")
+        for name in ("data", "model"):
+            mean, mx = plan.dilation[name]
+            assert mx <= 2, plan.dilation
+
+    def test_unaligned_dilation_is_large(self, planner):
+        plan = planner.plan([AxisSpec("data", 16, "y"),
+                             AxisSpec("model", 16, "x")], "unaligned", seed=1)
+        # random placement on a 16x16 torus averages ~8 hops per step
+        assert plan.dilation["data"][0] > 4.0
+        assert plan.dilation["model"][0] > 4.0
+
+    def test_multi_pod_axes(self, planner):
+        plan = planner.plan([AxisSpec("pod", 2, "pod"),
+                             AxisSpec("data", 16, "y"),
+                             AxisSpec("model", 16, "x")], "aligned")
+        assert plan.link_class["pod"] == "dcn"
+        assert plan.dilation["data"] == (1.0, 1)
+
+    def test_unaligned_respects_pods(self, planner, cluster):
+        plan = planner.plan([AxisSpec("pod", 2, "pod"),
+                             AxisSpec("data", 4, "y"),
+                             AxisSpec("model", 4, "x")], "unaligned", seed=2)
+        for pod_idx in range(2):
+            chips = plan.chip_grid[pod_idx].ravel()
+            pods = {cluster.chip_coords(c)[0] for c in chips}
+            assert pods == {pod_idx}
+
+    def test_random_permutation_expectation(self, cluster):
+        mean, _ = random_permutation_dilation(cluster, 0, 16, trials=16)
+        assert 6.0 < mean < 10.0  # 2x E[d] on 16-torus = 2*(16/4) = 8
+
+
+class TestAttachment:
+    def test_attachment_valid_and_executable(self, planner):
+        import jax
+        plan = planner.plan([AxisSpec("data", 1, "y"),
+                             AxisSpec("model", 1, "x")], "aligned")
+        spec = plan.attachment()
+        spec.validate()
+        from repro.core import MeshRuntime
+        mesh = MeshRuntime().execute(spec, jax.devices()[:1])
+        assert mesh.axis_names == ("data", "model")
+
+    def test_attachment_rejects_bad_coords(self, planner):
+        from repro.core.oci import AttachmentSpec, DeviceBinding
+        spec = AttachmentSpec(("a",), (2,), [DeviceBinding("x", (0,)),
+                                             DeviceBinding("y", (5,))])
+        with pytest.raises(ValueError):
+            spec.validate()
+
+
+class TestEndToEndClaim:
+    def test_full_knd_workflow(self, cluster):
+        reg = DriverRegistry()
+        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        n = reg.run_discovery()
+        assert n == 512 + 128  # chips + dcn nics
+        planner = MeshPlanner(cluster)
+        claim = planner.make_claim("job", 512)
+        StructuredAllocator(reg.pool, reg.classes).allocate(claim)
+        assert claim.allocated and len(claim.allocation.devices) == 512
+        reg.prepare(claim)
+        assert claim.prepared

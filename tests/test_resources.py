@@ -1,0 +1,144 @@
+"""DRA objects + allocators: slices, claims, constraints, the lottery."""
+
+import random
+
+import pytest
+
+from repro.core import (AllocationError, ClaimSpec, DeviceClass, DeviceRequest,
+                        LegacyAllocator, MatchAttribute, ResourceClaim,
+                        StructuredAllocator)
+from repro.core.drivers import DriverRegistry, GpuDriver, NicDriver
+from repro.topology.gcp import build_a4_cluster
+
+
+@pytest.fixture
+def a4_registry():
+    fab, nodes = build_a4_cluster(2)
+    reg = DriverRegistry()
+    reg.add(NicDriver(fab)).add(GpuDriver(fab))
+    reg.run_discovery()
+    return fab, nodes, reg
+
+
+def make_aligned_claim(name="aligned"):
+    """The paper's Topologically Aligned config: GPU + NIC, same PCI root."""
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[
+            DeviceRequest(name="gpu", device_class="gpu.nvidia.com"),
+            DeviceRequest(name="nic", device_class="rdma-nic"),
+        ],
+        constraints=[MatchAttribute(attribute="pciRoot")],
+    ))
+
+
+class TestDiscovery:
+    def test_slices_published(self, a4_registry):
+        _, _, reg = a4_registry
+        # 2 nodes x (8 gpus + 8 nics)
+        assert len(reg.pool.devices()) == 32
+
+    def test_device_attributes(self, a4_registry):
+        _, _, reg = a4_registry
+        nics = [d for d in reg.pool.devices() if d.driver == "dra.net"]
+        assert all("pciRoot" in d.attributes for d in nics)
+        assert all(d.attributes.get("rdma") for d in nics)
+
+
+class TestStructuredAllocator:
+    def test_aligned_allocation_same_pci_root(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = make_aligned_claim()
+        result = alloc.allocate(claim)
+        gpu = reg.pool.get(result.refs("gpu")[0].id) or \
+            next(d for d in reg.pool.devices(True)
+                 if d.id == result.refs("gpu")[0].id)
+        nic = next(d for d in reg.pool.devices(True)
+                   if d.id == result.refs("nic")[0].id)
+        assert gpu.attributes.get("pciRoot") == nic.attributes.get("pciRoot")
+        assert result.node  # node-scoped claim landed on one node
+
+    def test_selector_filtering(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = ResourceClaim(name="socket1", spec=ClaimSpec(requests=[
+            DeviceRequest(name="gpu", device_class="gpu.nvidia.com",
+                          selectors=['device.attributes.socket == 1'])]))
+        res = alloc.allocate(claim)
+        dev = next(d for d in reg.pool.devices(True)
+                   if d.id == res.refs("gpu")[0].id)
+        assert dev.attributes.get("socket") == 1
+
+    def test_exhaustion_raises(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = ResourceClaim(name="too-many", spec=ClaimSpec(requests=[
+            DeviceRequest(name="gpu", device_class="gpu.nvidia.com", count=9)]))
+        with pytest.raises(AllocationError):
+            alloc.allocate(claim)  # only 8 gpus per node, node-scoped
+
+    def test_double_allocation_blocked(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        c1 = make_aligned_claim("c1")
+        alloc.allocate(c1)
+        taken = {r.id for r in c1.allocation.refs()}
+        c2 = make_aligned_claim("c2")
+        alloc.allocate(c2)
+        assert taken.isdisjoint({r.id for r in c2.allocation.refs()})
+
+    def test_deallocate_releases(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = make_aligned_claim()
+        alloc.allocate(claim)
+        a0, _ = reg.pool.utilization()
+        alloc.deallocate(claim)
+        a1, _ = reg.pool.utilization()
+        assert a1 == a0 - 2 and claim.allocation is None
+
+    def test_cluster_scope(self, a4_registry):
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = ResourceClaim(name="all-gpus", spec=ClaimSpec(
+            requests=[DeviceRequest(name="gpu", device_class="gpu.nvidia.com",
+                                    count=16)],
+            topology_scope="cluster"))
+        res = alloc.allocate(claim)
+        assert len(res.devices) == 16
+
+
+class TestLegacyAllocator:
+    def test_lottery_is_attribute_blind(self, a4_registry):
+        """The unaligned arm: random GPU picks hit different PCI roots."""
+        fab, nodes, reg = a4_registry
+        roots = set()
+        for seed in range(16):
+            reg2 = DriverRegistry()
+            reg2.add(NicDriver(fab)).add(GpuDriver(fab))
+            reg2.run_discovery()
+            legacy = LegacyAllocator(reg2.pool, reg2.classes,
+                                     rng=random.Random(seed))
+            picked = legacy.allocate_count("gpu.nvidia.com", 1,
+                                           node=nodes[0].name)
+            roots.add(picked[0].attributes.get("pciRoot"))
+        assert len(roots) > 3  # the lottery spreads across roots
+
+    def test_count_semantics(self, a4_registry):
+        _, nodes, reg = a4_registry
+        legacy = LegacyAllocator(reg.pool, reg.classes)
+        with pytest.raises(AllocationError):
+            legacy.allocate_count("gpu.nvidia.com", 99)
+
+
+class TestClaimStatus:
+    def test_kep4817_network_status(self, a4_registry):
+        """Drivers report standardized interface data in claim status."""
+        from repro.core.claims import NetworkDeviceData
+        _, _, reg = a4_registry
+        alloc = StructuredAllocator(reg.pool, reg.classes)
+        claim = make_aligned_claim()
+        res = alloc.allocate(claim)
+        res.device_statuses[res.refs("nic")[0].id] = NetworkDeviceData(
+            interface_name="gpu0rdma0", ips=["10.0.0.1"])
+        assert res.device_statuses[res.refs("nic")[0].id].ips == ["10.0.0.1"]
