@@ -1,0 +1,108 @@
+"""Control-plane overhead: declarative reconcile vs direct imperative calls.
+
+Measures submit->Ready latency of the API-store path (create objects,
+run the reconcilers to the Ready condition) against the equivalent
+hand-sequenced imperative calls (StructuredAllocator.allocate +
+DriverRegistry.prepare) for claims of 1-32 devices. This prices the
+paper's architectural trade: what does moving from imperative wiring to
+declarative reconciliation cost per claim, and where does the time go
+(per-phase latencies from the condition timestamps)?
+
+  PYTHONPATH=src python -m benchmarks.bench_reconcile
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Tuple
+
+from repro.api import ControlPlane, Workload
+from repro.core import (ClaimSpec, DeviceRequest, DriverRegistry, IciDriver,
+                        ResourceClaim, StructuredAllocator, TpuDriver)
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+
+SIZES = (1, 2, 4, 8, 16, 32)
+REPS = 5
+
+
+def chip_claim(name: str, count: int) -> ResourceClaim:
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
+                                count=count)],
+        topology_scope="cluster"))
+
+
+def make_registry():
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=8, y=8))   # 64 chips
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    return cluster, reg
+
+
+def bench_imperative(reg: DriverRegistry, n: int, reps: int) -> List[float]:
+    alloc = StructuredAllocator(reg.pool, reg.classes)
+    out = []
+    for i in range(reps):
+        claim = chip_claim(f"imp-{n}-{i}", n)
+        t0 = time.perf_counter()
+        alloc.allocate(claim)
+        reg.prepare(claim)
+        out.append(time.perf_counter() - t0)
+        alloc.deallocate(claim)                 # cleanup outside timing
+    return out
+
+
+def bench_declarative(plane: ControlPlane, n: int,
+                      reps: int) -> Tuple[List[float], Dict[str, float]]:
+    out, phases = [], {}
+    for i in range(reps):
+        cname, wname = f"dec-{n}-{i}", f"dec-{n}-{i}-job"
+        t0 = time.perf_counter()
+        plane.submit(chip_claim(cname, n))
+        plane.submit(Workload(claim=cname), name=wname)
+        plane.wait_for("Workload", wname)
+        out.append(time.perf_counter() - t0)
+        phases = plane.phase_latencies[wname]
+        # cleanup outside timing: delete objects, release devices
+        claim = plane.store.get("ResourceClaim", cname).spec
+        plane.unprepare(claim)
+        plane.allocator.deallocate(claim)
+        plane.store.delete("Workload", wname)
+        plane.store.delete("ResourceClaim", cname)
+        plane.reconcile()
+    return out, phases
+
+
+def run(reps: int = REPS) -> Dict[str, object]:
+    _, reg_imp = make_registry()
+    reg_imp.run_discovery()
+    cluster, reg_dec = make_registry()
+    plane = ControlPlane(reg_dec, cluster)
+    plane.run_discovery()
+
+    rows = []
+    for n in SIZES:
+        imp = bench_imperative(reg_imp, n, reps)
+        dec, phases = bench_declarative(plane, n, reps)
+        imp_ms = 1e3 * sum(imp) / len(imp)
+        dec_ms = 1e3 * sum(dec) / len(dec)
+        rows.append({
+            "devices": n,
+            "imperative_ms": round(imp_ms, 3),
+            "declarative_ms": round(dec_ms, 3),
+            "overhead_ms": round(dec_ms - imp_ms, 3),
+            "overhead_x": round(dec_ms / imp_ms, 2) if imp_ms else None,
+            "phase_ms": {k: round(v * 1e3, 3) for k, v in phases.items()},
+        })
+    return {"bench": "reconcile", "reps": reps,
+            "pool_devices": len(reg_imp.pool.devices(include_allocated=True)),
+            "rows": rows}
+
+
+def main() -> None:
+    print(json.dumps(run(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -53,7 +53,7 @@ def bench_kernels() -> None:
           f"{4096 * 1024 * 8 / (us * 1e-6) / 1e9:.1f}GB/s")
 
 
-SECTIONS = ["startup", "nccl", "placement", "roofline", "kernels"]
+SECTIONS = ["startup", "nccl", "placement", "reconcile", "roofline", "kernels"]
 
 
 def main() -> None:
@@ -73,6 +73,9 @@ def main() -> None:
         elif section == "placement":
             from . import bench_placement
             bench_placement.main()
+        elif section == "reconcile":
+            from . import bench_reconcile
+            bench_reconcile.main()
         elif section == "roofline":
             from . import bench_roofline
             bench_roofline.main()

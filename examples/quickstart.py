@@ -1,11 +1,18 @@
-"""Quickstart: the KND model end-to-end in two minutes (CPU).
+"""Quickstart: the declarative KND control plane end-to-end (CPU).
 
-Walks the DraNet workflow (paper Fig. 7) against a simulated v5e pod:
-  1. drivers discover the fabric and publish ResourceSlices;
-  2. a ResourceClaim with CEL selectors is allocated (structured DRA);
-  3. the planner embeds a logical mesh into the ICI torus (aligned);
-  4. the OCI-style runtime executes the declarative attachment;
-  5. a (tiny) model trains a few steps on the resulting mesh.
+The paper's architecture, not just its objects: nothing here sequences
+allocate/prepare/attach by hand. We *submit API objects* and wait for a
+``Ready`` condition — the control plane's reconcilers do the workflow
+(paper Fig. 7) against a simulated v5e pod:
+
+  1. drivers discover the fabric; slices are mirrored as API objects;
+  2. a ResourceClaim with CEL selectors + a Workload are submitted;
+  3. the AllocationController solves the claim (structured DRA);
+  4. the PrepareController runs NodePrepareResources off-path;
+  5. the AttachmentController plans the mesh, fires the NRI hooks and
+     executes the OCI AttachmentSpec through the MeshRuntime;
+  6. the WorkloadController flips Ready; a (tiny) model trains on the
+     mesh read off the workload's status.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -18,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import core
+from repro.api import ControlPlane, Workload
 from repro.configs.registry import smoke_config
 from repro.data.pipeline import SyntheticLMData
 from repro.parallel.sharding import ShardingRules, use_rules
@@ -30,35 +38,38 @@ from repro.train.train_step import StepConfig, init_train_state, make_train_step
 cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=2))
 registry = core.DriverRegistry()
 registry.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-n = registry.run_discovery()
-print(f"[1] discovery: {n} devices published "
-      f"({len(registry.pool.nodes())} nodes)")
+plane = ControlPlane(registry, cluster)
+n = plane.run_discovery()
+print(f"[1] discovery: {n} devices published as "
+      f"{len(plane.store.list_objects('ResourceSlice'))} ResourceSlice "
+      f"objects ({len(registry.pool.nodes())} nodes)")
 
-# 2. claim with CEL selection ----------------------------------------------
-claim = core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
+# 2. submit declarative intent: a claim with CEL selection + a workload ----
+plane.submit(core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
     requests=[core.DeviceRequest(
         name="chips", device_class="tpu.google.com", count=8,
         selectors=['device.attributes["generation"] == "v5e"',
                    'device.capacity["hbm"] >= "8Gi"'])],
-    topology_scope="cluster"))
-allocator = core.StructuredAllocator(registry.pool, registry.classes)
-allocator.allocate(claim)
-registry.prepare(claim)
-print(f"[2] claim {claim.name}: {len(claim.allocation.devices)} chips, "
-      f"prepared={claim.prepared}")
+    topology_scope="cluster")))
+plane.submit(Workload(claim="quickstart",
+                      axes=[core.AxisSpec("data", 2, "y"),
+                            core.AxisSpec("model", 4, "x")]),
+             name="quickstart-job")
+print(f"[2] submitted ResourceClaim/quickstart + Workload/quickstart-job "
+      f"(store v{plane.store.resource_version})")
 
-# 3. topology-aware planning ------------------------------------------------
-planner = core.MeshPlanner(cluster)
-plan = planner.plan([core.AxisSpec("data", 2, "y"),
-                     core.AxisSpec("model", 4, "x")], "aligned", claim)
-print(f"[3] {plan.summary()}")
+# 3. reconcile: controllers do allocate -> prepare -> attach ---------------
+job = plane.wait_for("Workload", "quickstart-job")   # Ready condition
+print(f"[3] reconciled: {job.conditions_summary()}")
+lat = job.status.outputs["phase_latency_s"]
+print("    phase latency: " + "  ".join(
+    f"{k}={v * 1e3:.1f}ms" for k, v in lat.items()))
 
-# 4. declarative attachment -------------------------------------------------
-results = registry.bus.publish(core.Events.RUN_POD_SANDBOX,
-                               plan=plan, claim=claim)
-spec = next(r.value for r in results if r.ok and r.value is not None)
-mesh = core.MeshRuntime().execute(spec)
-print(f"[4] mesh attached: {dict(mesh.shape)}")
+# 4. read the attachment results off the workload status -------------------
+plan = job.status.outputs["plan"]
+mesh = job.status.outputs["mesh"]
+print(f"[4] {plan.summary()}")
+print(f"    mesh attached: {dict(mesh.shape)}")
 
 # 5. train ------------------------------------------------------------------
 cfg = smoke_config("h2o-danube-1.8b")
@@ -73,5 +84,5 @@ with use_rules(ShardingRules(mesh=mesh)):
         state, metrics = step(state, batch)
         if s % 3 == 0:
             print(f"[5] step {s}: loss={float(metrics['loss']):.3f}")
-print("done — the same workflow drives the 256/512-chip production mesh "
-      "in repro.launch.dryrun")
+print("done — the same object submission drives the 256/512-chip "
+      "production mesh in repro.launch.dryrun")

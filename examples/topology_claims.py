@@ -8,30 +8,35 @@ then shows the same physics on the TPU torus (ring dilation).
 """
 
 from repro import core
+from repro.api import ControlPlane
 from repro.topology.gcp import build_a4_cluster
 from repro.topology.netsim import NcclModel, run_lottery
 from repro.topology.tpu import build_tpu_cluster
 
-# --- the two claims -------------------------------------------------------
+# --- the aligned claim, declaratively -------------------------------------
+# submit the ResourceClaim object; the AllocationController solves it and
+# reports through the Allocated condition (no allocator call here)
 fab, nodes = build_a4_cluster(2)
 reg = core.DriverRegistry()
 reg.add(core.NicDriver(fab)).add(core.GpuDriver(fab))
-reg.run_discovery()
+plane = ControlPlane(reg)   # no TPU cluster: claims-only control plane
+plane.run_discovery()
 
-aligned_claim = core.ResourceClaim(name="aligned", spec=core.ClaimSpec(
+plane.submit(core.ResourceClaim(name="aligned", spec=core.ClaimSpec(
     requests=[
         core.DeviceRequest(name="gpu", device_class="gpu.nvidia.com"),
         core.DeviceRequest(name="nic", device_class="rdma-nic",
                            selectors=['device.attributes["rdma"] == true']),
     ],
     # "a NIC that is known to be on the same PCI root as the requested GPU"
-    constraints=[core.MatchAttribute(attribute="pciRoot")]))
+    constraints=[core.MatchAttribute(attribute="pciRoot")])))
 
-alloc = core.StructuredAllocator(reg.pool, reg.classes)
-res = alloc.allocate(aligned_claim)
+obj = plane.wait_for("ResourceClaim", "aligned", "Allocated")
+res = obj.spec.allocation
 gpu_ref, nic_ref = res.refs("gpu")[0], res.refs("nic")[0]
 print(f"aligned claim -> gpu={gpu_ref.name} nic={nic_ref.name} "
       f"(same PCI root, node {res.node})")
+print(f"  conditions: {obj.conditions_summary()}")
 
 # --- the measured consequence (Tables II/III) ------------------------------
 model = NcclModel(fab)

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI smoke gate: tier-1 tests + the declarative quickstart example.
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: declarative quickstart =="
+python examples/quickstart.py
+
+echo "CI_OK"

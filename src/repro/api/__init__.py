@@ -1,0 +1,28 @@
+"""Declarative control plane: typed API store + reconciler controllers.
+
+The API-centric architecture the paper argues for (§II–§III): scenarios
+submit versioned objects (ResourceClaims, Workloads) to an
+:class:`ApiStore` and wait on ``Ready`` conditions; the
+:class:`ControlPlane`'s reconcilers do all the wiring that launch
+scripts used to hand-sequence. See docs/API.md for the workflow.
+"""
+
+from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus,
+                      Workload, TRUE, FALSE, UNKNOWN,
+                      CONDITION_ALLOCATED, CONDITION_ATTACHED,
+                      CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
+from .store import (ApiError, ApiStore, ConflictError, Watch, WatchEvent,
+                    KIND_OF)
+from .controllers import (AllocationController, AttachmentController,
+                          ControlPlane, Controller, PrepareController,
+                          WorkloadController)
+
+__all__ = [
+    "ApiObject", "Condition", "ObjectMeta", "ObjectStatus", "Workload",
+    "TRUE", "FALSE", "UNKNOWN",
+    "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
+    "CONDITION_READY", "PHASE_ORDER",
+    "ApiError", "ApiStore", "ConflictError", "Watch", "WatchEvent", "KIND_OF",
+    "Controller", "AllocationController", "PrepareController",
+    "AttachmentController", "WorkloadController", "ControlPlane",
+]

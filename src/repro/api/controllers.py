@@ -1,0 +1,446 @@
+"""Reconciler controllers: converge the cluster onto the API objects.
+
+This is the paper's control loop made explicit. Users *submit objects*
+(ResourceClaims, Workloads) to the :class:`~repro.api.store.ApiStore`;
+the controllers below watch the store and drive each claim through
+
+    allocate -> NodePrepareResources -> NRI hooks -> OCI AttachmentSpec
+             -> MeshRuntime
+
+recording a condition per phase (``Allocated`` -> ``Prepared`` ->
+``Attached`` -> ``Ready``) and the latency of each transition. The old
+imperative classes (StructuredAllocator, DriverRegistry, MeshPlanner,
+MeshRuntime) survive unchanged as the controllers' *internals* — the
+refactor moves the sequencing out of every launch script and into one
+reusable reconciliation loop.
+
+Reconciliation is level-triggered: controllers look at current state,
+not at edit deltas, so a spec edit, a lost device, or a scale-up all
+converge through the same code path (the elastic story of the paper's
+§II critique — no imperative per-event reconfiguration).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from ..core.allocator import AllocationError, StructuredAllocator
+from ..core.claims import ResourceClaim
+from ..core.drivers import DriverRegistry
+from ..core.nri import Events
+from ..core.oci import AttachmentSpec, MeshRuntime
+from ..core.planner import MeshPlanner
+from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
+                      CONDITION_ALLOCATED, CONDITION_ATTACHED,
+                      CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
+from .store import ApiStore
+
+__all__ = ["Controller", "AllocationController", "PrepareController",
+           "AttachmentController", "WorkloadController", "ControlPlane"]
+
+
+class Controller:
+    """Base reconciler: examines one object, returns True iff it acted."""
+
+    kind: str = ""
+    name: str = "controller"
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        raise NotImplementedError
+
+    # -- helpers -----------------------------------------------------------
+    @staticmethod
+    def _set(plane: "ControlPlane", obj: ApiObject, type_: str, ok: bool,
+             reason: str, message: str = "",
+             transition: Optional[float] = None) -> bool:
+        cond = Condition(type_, TRUE if ok else FALSE, reason=reason,
+                         message=message,
+                         observed_generation=obj.meta.generation)
+        if transition is not None:
+            cond.last_transition = transition
+        return plane.store.set_condition(obj.meta.kind, obj.meta.name, cond)
+
+
+class AllocationController(Controller):
+    """ResourceClaim -> structured allocation (+ healing).
+
+    Re-allocates when the spec generation moved (user edited the claim)
+    or when allocated devices vanished from the pool (node failure) —
+    the declarative self-healing the imperative wiring never had.
+    """
+
+    kind = "ResourceClaim"
+    name = "allocation-controller"
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        claim: ResourceClaim = obj.spec
+        changed = False
+        if claim.allocated:
+            lost = [a.ref.id for a in claim.allocation.devices
+                    if plane.registry.pool.get(a.ref.id) is None]
+            if not lost and obj.is_true(CONDITION_ALLOCATED, current=True):
+                return False
+            plane.unprepare(claim)
+            plane.allocator.deallocate(claim)
+            changed |= self._set(
+                plane, obj, CONDITION_ALLOCATED, False,
+                "DeviceLost" if lost else "SpecChanged",
+                f"lost {len(lost)} device(s)" if lost
+                else "claim spec edited; re-allocating")
+        t0 = time.perf_counter()
+        try:
+            result = plane.allocator.allocate(claim)
+        except AllocationError as e:
+            return self._set(plane, obj, CONDITION_ALLOCATED, False,
+                             "Unsatisfiable", str(e)[:240]) or changed
+        dt = time.perf_counter() - t0
+        self._set(plane, obj, CONDITION_ALLOCATED, True, "Allocated",
+                  f"{len(result.devices)} device(s) in {dt * 1e3:.2f}ms")
+        plane.registry.bus.publish(Events.CLAIM_ALLOCATED, claim=claim)
+        return True
+
+
+class PrepareController(Controller):
+    """Allocated claims -> NodePrepareResources (off the critical path)."""
+
+    kind = "ResourceClaim"
+    name = "prepare-controller"
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        claim: ResourceClaim = obj.spec
+        if not (claim.allocated and obj.is_true(CONDITION_ALLOCATED,
+                                                current=True)):
+            if claim.prepared or plane.is_prepared(claim):
+                plane.unprepare(claim)
+                return self._set(plane, obj, CONDITION_PREPARED, False,
+                                 "TornDown", "claim lost its allocation")
+            cond = obj.condition(CONDITION_PREPARED)
+            if cond is not None and cond.true:
+                return self._set(plane, obj, CONDITION_PREPARED, False,
+                                 "TornDown", "claim lost its allocation")
+            return False
+        if claim.prepared and obj.is_true(CONDITION_PREPARED, current=True):
+            return False
+        t0 = time.perf_counter()
+        prepared = plane.registry.prepare(claim)
+        dt = time.perf_counter() - t0
+        return self._set(plane, obj, CONDITION_PREPARED, True, "Prepared",
+                         f"{sorted(prepared)} in {dt * 1e3:.2f}ms")
+
+
+class AttachmentController(Controller):
+    """Prepared mesh workloads -> plan -> NRI hooks -> AttachmentSpec.
+
+    Emits the declarative attachment over the NRI bus (RunPodSandbox /
+    CreateContainer) and, when the workload asks for it, executes it
+    through the privileged MeshRuntime. A fingerprint of (workload
+    generation, claim generation, allocated devices) guards against
+    stale plans: any spec edit or re-allocation forces a re-plan.
+    """
+
+    kind = "Workload"
+    name = "attachment-controller"
+
+    @staticmethod
+    def _fingerprint(obj: ApiObject, claim_obj: ApiObject) -> tuple:
+        refs = tuple(a.ref.id for a in claim_obj.spec.allocation.devices)
+        return (obj.meta.generation, claim_obj.meta.generation, refs)
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        wl: Workload = obj.spec
+        if not (wl.claim and wl.axes):
+            return False
+        claim_obj = plane.store.try_get("ResourceClaim", wl.claim)
+        if claim_obj is None or not (
+                claim_obj.is_true(CONDITION_ALLOCATED, current=True)
+                and claim_obj.is_true(CONDITION_PREPARED, current=True)):
+            cond = obj.condition(CONDITION_ATTACHED)
+            if cond is not None and cond.true:
+                return self._set(plane, obj, CONDITION_ATTACHED, False,
+                                 "ClaimNotReady",
+                                 "waiting for claim to re-converge")
+            return False
+        fp = self._fingerprint(obj, claim_obj)
+        if (obj.is_true(CONDITION_ATTACHED, current=True)
+                and obj.status.outputs.get("attachment_fingerprint") == fp):
+            return False
+        if plane.planner is None:
+            return self._set(plane, obj, CONDITION_ATTACHED, False,
+                             "NoPlanner",
+                             "control plane has no cluster/planner")
+        t0 = time.perf_counter()
+        try:
+            plan = plane.planner.plan(list(wl.axes), wl.placement,
+                                      claim_obj.spec, seed=wl.seed)
+        except Exception as e:  # noqa: BLE001 - surfaced as a condition
+            return self._set(plane, obj, CONDITION_ATTACHED, False,
+                             "PlanFailed", f"{type(e).__name__}: {e}"[:240])
+        # NRI hooks: independent drivers act on the pod-sandbox event; a
+        # driver may emit the AttachmentSpec itself (DraNet's role), else
+        # the plan's own declarative spec is used.
+        results = plane.registry.bus.publish(Events.RUN_POD_SANDBOX,
+                                             plan=plan, claim=claim_obj.spec)
+        spec = next((r.value for r in results
+                     if r.ok and isinstance(r.value, AttachmentSpec)), None)
+        if spec is None:
+            spec = plan.attachment()
+        plane.registry.bus.publish(Events.CREATE_CONTAINER,
+                                   plan=plan, claim=claim_obj.spec)
+        store = plane.store
+        store.set_output(self.kind, obj.meta.name, "plan", plan)
+        store.set_output(self.kind, obj.meta.name, "attachment", spec)
+        store.set_output(self.kind, obj.meta.name, "attachment_fingerprint", fp)
+        if wl.build_mesh:
+            mesh = plane.runtime.execute(spec)
+            store.set_output(self.kind, obj.meta.name, "mesh", mesh)
+        dt = time.perf_counter() - t0
+        self._set(plane, obj, CONDITION_ATTACHED, True, "Attached",
+                  f"{plan.summary()} in {dt * 1e3:.2f}ms")
+        return True
+
+
+class WorkloadController(Controller):
+    """Workload replica management + condition roll-up + Ready.
+
+    Template workloads are the serve replica-set shape: the controller
+    stamps one claim per replica from the ResourceClaimTemplate and
+    converges claim count on ``spec.replicas`` (scale up/down is a spec
+    edit). Single-claim workloads roll up their claim's conditions and
+    go Ready once (optionally) attached.
+    """
+
+    kind = "Workload"
+    name = "workload-controller"
+
+    def _replica_claims(self, plane: "ControlPlane", obj: ApiObject
+                        ) -> Optional[List[ApiObject]]:
+        wl: Workload = obj.spec
+        store = plane.store
+        tmpl = store.try_get("ResourceClaimTemplate", wl.claim_template)
+        if tmpl is None:
+            return None
+        owned = store.list_objects("ResourceClaim",
+                                   selector={"workload": obj.meta.name})
+        while len(owned) < wl.replicas:
+            claim = tmpl.spec.instantiate(owner=obj.meta.name)
+            owned.append(store.create(claim,
+                                      labels={"workload": obj.meta.name}))
+        while len(owned) > wl.replicas:
+            extra = owned.pop()
+            plane.unprepare(extra.spec)
+            if extra.spec.allocated:
+                plane.allocator.deallocate(extra.spec)
+            store.delete("ResourceClaim", extra.meta.name)
+        return owned
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        wl: Workload = obj.spec
+        store = plane.store
+        changed = False
+        if wl.claim_template:
+            prior = store.resource_version
+            claims = self._replica_claims(plane, obj)
+            if claims is None:
+                return self._set(plane, obj, CONDITION_READY, False,
+                                 "TemplateMissing",
+                                 f"no ResourceClaimTemplate "
+                                 f"{wl.claim_template!r}")
+            changed |= store.resource_version != prior
+        else:
+            cobj = store.try_get("ResourceClaim", wl.claim)
+            if cobj is None:
+                return self._set(plane, obj, CONDITION_READY, False,
+                                 "ClaimMissing",
+                                 f"no ResourceClaim {wl.claim!r}")
+            claims = [cobj]
+        n = len(claims)
+        all_alloc = all(c.is_true(CONDITION_ALLOCATED, current=True)
+                        for c in claims)
+        all_prep = all(c.is_true(CONDITION_PREPARED, current=True)
+                       for c in claims)
+
+        def mirror_ts(phase: str, ok: bool) -> Optional[float]:
+            # a roll-up condition transitions when the LAST claim did,
+            # not when this controller happened to observe it
+            if not ok:
+                return None
+            return max(c.condition(phase).last_transition for c in claims)
+
+        changed |= self._set(plane, obj, CONDITION_ALLOCATED, all_alloc,
+                             "AllClaimsAllocated" if all_alloc
+                             else "WaitingForAllocation",
+                             f"{sum(c.is_true(CONDITION_ALLOCATED, current=True) for c in claims)}/{n} claims",
+                             transition=mirror_ts(CONDITION_ALLOCATED, all_alloc))
+        changed |= self._set(plane, obj, CONDITION_PREPARED, all_prep,
+                             "AllClaimsPrepared" if all_prep
+                             else "WaitingForPrepare",
+                             f"{sum(c.is_true(CONDITION_PREPARED, current=True) for c in claims)}/{n} claims",
+                             transition=mirror_ts(CONDITION_PREPARED, all_prep))
+        needs_attach = bool(wl.claim and wl.axes)
+        attached = (obj.is_true(CONDITION_ATTACHED, current=True)
+                    if needs_attach else all_prep)
+        ready = all_alloc and all_prep and attached
+        was_ready = obj.is_true(CONDITION_READY, current=True)
+        blocker = (CONDITION_ALLOCATED if not all_alloc else
+                   CONDITION_PREPARED if not all_prep else
+                   CONDITION_ATTACHED)
+        changed |= self._set(plane, obj, CONDITION_READY, ready,
+                             "Converged" if ready else f"Blocked:{blocker}",
+                             f"{n} claim(s), role={wl.role}" if ready else "")
+        if ready and not was_ready:
+            store.set_output(self.kind, obj.meta.name, "claims",
+                             [c.meta.name for c in claims])
+            lat = plane.record_phase_latencies(obj, claims)
+            store.set_output(self.kind, obj.meta.name, "phase_latency_s", lat)
+            plane.registry.bus.publish(Events.JOB_SUBMITTED,
+                                       workload=obj.meta.name, role=wl.role)
+        return changed
+
+
+class ControlPlane:
+    """The declarative control plane: one store, one reconciler set.
+
+    Wraps a :class:`DriverRegistry` (drivers, pool, NRI bus) and exposes
+    the API-centric workflow every scenario now uses::
+
+        plane = ControlPlane(registry, cluster)
+        plane.run_discovery()
+        plane.submit(claim)
+        plane.submit(Workload(claim=claim.name, axes=[...]))
+        obj = plane.wait_for("Workload", name)       # reconcile -> Ready
+        mesh = obj.status.outputs["mesh"]
+
+    ``reconcile()`` runs the controllers level-triggered until the watch
+    stream goes quiet (a fixpoint): every round first mirrors the
+    driver-published ResourceSlices into the store, then lets each
+    controller act on each object of its kind.
+    """
+
+    def __init__(self, registry: DriverRegistry, cluster: Any = None,
+                 store: Optional[ApiStore] = None,
+                 runtime: Optional[MeshRuntime] = None):
+        self.registry = registry
+        self.store = store or ApiStore()
+        self.cluster = cluster
+        self.planner = MeshPlanner(cluster) if cluster is not None else None
+        self.allocator = StructuredAllocator(registry.pool, registry.classes)
+        self.runtime = runtime or MeshRuntime()
+        self.controllers: List[Controller] = [
+            AllocationController(), PrepareController(),
+            AttachmentController(), WorkloadController(),
+        ]
+        self.phase_latencies: Dict[str, Dict[str, float]] = {}
+        self._watch = self.store.watch()
+
+    # -- inventory ---------------------------------------------------------
+    def run_discovery(self) -> int:
+        """Drivers publish slices; mirror them + device classes as objects."""
+        n = self.registry.run_discovery()
+        self.sync_inventory()
+        return n
+
+    def sync_inventory(self) -> None:
+        """Mirror device classes + pool ResourceSlices into the store."""
+        for cls in self.registry.classes.values():
+            if self.store.try_get("DeviceClass", cls.name) is None:
+                self.store.create(cls)
+        live = {}
+        for sl in self.registry.pool.slices:
+            name = f"{sl.driver}~{sl.pool}~{sl.node}".replace("/", "_")
+            live[name] = sl
+            obj = self.store.try_get("ResourceSlice", name)
+            if obj is None:
+                self.store.create(sl, name=name,
+                                  labels={"node": sl.node, "driver": sl.driver})
+            elif obj.spec is not sl:   # pool re-publication replaces slices
+                self.store.update_spec("ResourceSlice", name,
+                                       lambda _old, new=sl: new)
+        for obj in self.store.list_objects("ResourceSlice"):
+            if obj.meta.name not in live:
+                self.store.delete("ResourceSlice", obj.meta.name)
+
+    # -- object submission -------------------------------------------------
+    def submit(self, spec: Any, name: Optional[str] = None,
+               labels: Optional[Dict[str, str]] = None) -> ApiObject:
+        return self.store.create(spec, name=name, labels=labels)
+
+    def edit(self, kind: str, name: str, mutate) -> ApiObject:
+        """Spec edit: bumps generation; reconcilers converge on it."""
+        return self.store.update_spec(kind, name, mutate)
+
+    # -- reconciliation ----------------------------------------------------
+    def reconcile(self, max_rounds: int = 64) -> int:
+        """Run controllers to a fixpoint; returns rounds taken."""
+        for round_no in range(1, max_rounds + 1):
+            self.sync_inventory()
+            self._watch.poll()          # drain: this round's baseline
+            changed = False
+            for ctl in self.controllers:
+                for obj in list(self.store.list_objects(ctl.kind)):
+                    if self.store.try_get(obj.meta.kind, obj.meta.name) is None:
+                        continue        # deleted by an earlier controller
+                    changed = bool(ctl.reconcile(self, obj)) or changed
+            if not changed and not self._watch.pending:
+                return round_no
+        raise RuntimeError(f"reconcile did not converge in {max_rounds} rounds")
+
+    def wait_for(self, kind: str, name: str,
+                 condition: str = CONDITION_READY) -> ApiObject:
+        """Reconcile until ``condition`` is True for the current spec.
+
+        Synchronous analogue of `kubectl wait --for=condition=...`:
+        raises with the object's condition summary if the controllers
+        reach a fixpoint without converging.
+        """
+        self.reconcile()
+        obj = self.store.get(kind, name)
+        if not obj.is_true(condition, current=True):
+            raise RuntimeError(
+                f"{kind}/{name} did not reach {condition}=True: "
+                f"{obj.conditions_summary()}")
+        return obj
+
+    # -- claim teardown helpers (controller internals) ---------------------
+    def is_prepared(self, claim: ResourceClaim) -> bool:
+        return any(claim.uid in d.prepared
+                   for d in self.registry.drivers.values())
+
+    def unprepare(self, claim: ResourceClaim) -> None:
+        involved = [d for d in self.registry.drivers.values()
+                    if claim.uid in d.prepared]
+        for d in involved:
+            d.node_unprepare_resources(claim)
+        if involved:
+            self.registry.bus.publish(Events.NODE_UNPREPARE_RESOURCES,
+                                      claim=claim)
+
+    # -- telemetry ---------------------------------------------------------
+    def record_phase_latencies(self, obj: ApiObject,
+                               claims: List[ApiObject]) -> Dict[str, float]:
+        """Per-phase wall time from condition transition timestamps."""
+        stamps: Dict[str, float] = {}
+        for phase in PHASE_ORDER:
+            cands = [c.condition(phase) for c in ([obj] + claims)]
+            times = [c.last_transition for c in cands if c is not None and c.true]
+            if times:
+                stamps[phase] = max(times)
+        lat: Dict[str, float] = {}
+        prev = obj.meta.created
+        for phase in PHASE_ORDER:
+            if phase in stamps:
+                lat[phase] = max(stamps[phase] - prev, 0.0)
+                prev = stamps[phase]
+        lat["total"] = max(prev - obj.meta.created, 0.0)
+        self.phase_latencies[obj.meta.name] = lat
+        return lat
+
+    # -- convenience accessors --------------------------------------------
+    def output(self, name: str, key: str, kind: str = "Workload") -> Any:
+        return self.store.get(kind, name).status.outputs.get(key)
+
+    def mesh(self, workload: str) -> Any:
+        return self.output(workload, "mesh")
+
+    def plan(self, workload: str) -> Any:
+        return self.output(workload, "plan")

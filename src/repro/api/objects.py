@@ -1,0 +1,172 @@
+"""Typed API objects: metadata envelope, conditions, and the Workload.
+
+The paper's architectural thesis (§II–§III) is that KNDs work because
+networking state lives in *declarative, versioned API objects* that
+controllers reconcile — not in imperative call chains. This module is
+the object model for that control plane:
+
+* :class:`ObjectMeta` — Kubernetes-style metadata: name/uid/labels plus
+  ``resource_version`` (bumped on *every* write, the watch cursor) and
+  ``generation`` (bumped on *spec* writes only, the reconciler's "did
+  the user change intent?" signal).
+* :class:`Condition` — typed status conditions (``Allocated``,
+  ``Prepared``, ``Attached``, ``Ready``) with observed generation, so a
+  condition can be "True, but for an older spec".
+* :class:`Workload` — the one genuinely new object: a declarative
+  description of a job / serve replica set. It names a ResourceClaim
+  (or stamps claims from a ResourceClaimTemplate, one per replica) and
+  the logical mesh it wants; the controllers converge the cluster onto
+  it.
+
+The DRA payloads themselves (:class:`~repro.core.claims.ResourceClaim`,
+``DeviceClass``, ``ResourceSlice``, ``ResourceClaimTemplate``) are the
+existing core dataclasses — the store wraps them in an
+:class:`ApiObject` envelope rather than duplicating them.
+"""
+
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+__all__ = [
+    "TRUE", "FALSE", "UNKNOWN",
+    "Condition", "ObjectMeta", "ObjectStatus", "ApiObject", "Workload",
+    "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
+    "CONDITION_READY", "PHASE_ORDER",
+]
+
+# Condition status values (Kubernetes uses strings, not booleans, so a
+# condition can be Unknown — e.g. "not reconciled yet").
+TRUE = "True"
+FALSE = "False"
+UNKNOWN = "Unknown"
+
+# The claim/workload lifecycle, in order. Controllers drive objects
+# through these; per-phase latency is measured between transitions.
+CONDITION_ALLOCATED = "Allocated"
+CONDITION_PREPARED = "Prepared"
+CONDITION_ATTACHED = "Attached"
+CONDITION_READY = "Ready"
+PHASE_ORDER = (CONDITION_ALLOCATED, CONDITION_PREPARED,
+               CONDITION_ATTACHED, CONDITION_READY)
+
+
+@dataclass
+class Condition:
+    """One typed status condition (mirrors ``metav1.Condition``)."""
+
+    type: str
+    status: str = UNKNOWN
+    reason: str = ""
+    message: str = ""
+    observed_generation: int = 0
+    last_transition: float = field(default_factory=time.monotonic)
+
+    @property
+    def true(self) -> bool:
+        return self.status == TRUE
+
+    def same_state(self, other: "Condition") -> bool:
+        """Equal ignoring the transition timestamp (idempotent writes)."""
+        return (self.type == other.type and self.status == other.status
+                and self.reason == other.reason
+                and self.message == other.message
+                and self.observed_generation == other.observed_generation)
+
+
+@dataclass
+class ObjectMeta:
+    name: str
+    kind: str = ""
+    uid: str = field(default_factory=lambda: uuid.uuid4().hex[:12])
+    resource_version: int = 0    # bumped on every write (watch cursor)
+    generation: int = 1          # bumped on spec writes only
+    labels: Dict[str, str] = field(default_factory=dict)
+    created: float = field(default_factory=time.monotonic)
+
+
+@dataclass
+class ObjectStatus:
+    """The status subresource: conditions + free-form controller outputs."""
+
+    conditions: List[Condition] = field(default_factory=list)
+    # Reconciler outputs keyed by name (e.g. 'plan', 'mesh', 'attachment',
+    # 'claims', 'phase_latency_s'). Kept out of spec: status is derived
+    # state, rebuildable by re-running the controllers.
+    outputs: Dict[str, Any] = field(default_factory=dict)
+
+    def condition(self, type_: str) -> Optional[Condition]:
+        for c in self.conditions:
+            if c.type == type_:
+                return c
+        return None
+
+
+@dataclass
+class ApiObject:
+    """Envelope stored by :class:`~repro.api.store.ApiStore`.
+
+    ``spec`` is the typed payload (a core DRA object or a
+    :class:`Workload`); the envelope owns versioning and status.
+    """
+
+    meta: ObjectMeta
+    spec: Any
+    status: ObjectStatus = field(default_factory=ObjectStatus)
+
+    def condition(self, type_: str) -> Optional[Condition]:
+        return self.status.condition(type_)
+
+    def is_true(self, type_: str, *, current: bool = False) -> bool:
+        """Is the condition True (and, if ``current``, for this generation)?"""
+        c = self.condition(type_)
+        if c is None or not c.true:
+            return False
+        return (not current) or c.observed_generation == self.meta.generation
+
+    def conditions_summary(self) -> str:
+        return " ".join(f"{c.type}={c.status}"
+                        f"@g{c.observed_generation}" for c in
+                        self.status.conditions) or "<no conditions>"
+
+
+@dataclass
+class Workload:
+    """Declarative description of a job or serve replica set.
+
+    Exactly one of ``claim`` / ``claim_template`` is set:
+
+    * ``claim``: the workload owns one named ResourceClaim and (when
+      ``axes`` is non-empty) wants it planned into a logical mesh and
+      attached — the training-job shape.
+    * ``claim_template``: the workload stamps ``replicas`` claims from a
+      ResourceClaimTemplate — the paper's StatefulSet/serve-replica
+      shape. Scale up/down is a ``replicas`` spec edit the reconciler
+      converges on.
+    """
+
+    claim: str = ""
+    claim_template: str = ""
+    # Logical mesh request (planner input); empty = claim-only workload.
+    axes: List[Any] = field(default_factory=list)      # List[AxisSpec]
+    placement: str = "aligned"
+    seed: int = 0
+    role: str = "train"            # 'train' | 'serve'
+    replicas: int = 1
+    # Execute the AttachmentSpec through MeshRuntime (needs enough JAX
+    # devices in-process). False still emits the declarative spec.
+    build_mesh: bool = True
+
+    def __post_init__(self) -> None:
+        if bool(self.claim) == bool(self.claim_template):
+            raise ValueError(
+                "Workload needs exactly one of claim / claim_template")
+        if self.claim_template and self.axes:
+            raise ValueError(
+                "axes (mesh planning) requires a single-claim workload; "
+                "template replica sets are not planned into one mesh")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")

@@ -1,0 +1,246 @@
+"""ApiStore: a typed, versioned, watchable in-memory object store.
+
+The single source of truth for the declarative control plane — the
+API-server analogue of the paper's architecture. Every mutation bumps a
+monotonic ``resource_version`` and appends a :class:`WatchEvent` to an
+ordered log; :class:`Watch` cursors replay the log, so a controller that
+starts late still sees every object (level-triggered reconciliation).
+
+Semantics (deliberately Kubernetes-shaped):
+
+* **typed**: only registered payload types may be stored; the kind is
+  derived from the payload's Python type.
+* **spec vs status**: ``update_spec`` bumps ``generation`` (user intent
+  changed); ``update_status`` / ``set_condition`` bump only
+  ``resource_version``. Controllers compare a condition's
+  ``observed_generation`` to ``meta.generation`` to detect stale work.
+* **optimistic concurrency**: writers may pass the resource version they
+  read; a mismatch raises :class:`ConflictError`.
+* **label selectors**: ``list_objects(selector={"app": "x"})`` filters
+  by exact label match, like a Kubernetes label selector.
+* **idempotent conditions**: ``set_condition`` is a no-op (no version
+  bump, no watch event) when the condition state is unchanged — this is
+  what lets reconcile loops detect a fixpoint.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, replace
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Tuple, Type)
+
+from ..core.claims import (DeviceClass, ResourceClaim, ResourceClaimTemplate)
+from ..core.resources import ResourceSlice
+from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus, TRUE,
+                      Workload)
+
+__all__ = ["ApiStore", "Watch", "WatchEvent", "ConflictError",
+           "ApiError", "KIND_OF"]
+
+# The typed registry: payload type -> kind string. This is the "schema"
+# of the API — create() rejects anything else.
+KIND_OF: Dict[Type[Any], str] = {
+    ResourceClaim: "ResourceClaim",
+    ResourceClaimTemplate: "ResourceClaimTemplate",
+    DeviceClass: "DeviceClass",
+    ResourceSlice: "ResourceSlice",
+    Workload: "Workload",
+}
+
+
+class ApiError(KeyError):
+    """Unknown object / kind."""
+
+
+class ConflictError(RuntimeError):
+    """Optimistic-concurrency failure: resource version moved underfoot."""
+
+
+ADDED = "ADDED"
+MODIFIED = "MODIFIED"
+DELETED = "DELETED"
+
+
+@dataclass(frozen=True)
+class WatchEvent:
+    type: str                 # ADDED | MODIFIED | DELETED
+    kind: str
+    name: str
+    resource_version: int
+    object: ApiObject         # live reference (single-process store)
+
+
+class Watch:
+    """A cursor over the store's event log.
+
+    ``poll()`` returns the events appended since the previous poll
+    (optionally filtered by kind). Synchronous by design: reconcilers
+    run deterministically in-process, no threads needed for tests.
+    """
+
+    def __init__(self, store: "ApiStore", kind: Optional[str],
+                 since_version: int):
+        self._store = store
+        self._kind = kind
+        self._pos = store._log_index_after(since_version)
+
+    def poll(self) -> List[WatchEvent]:
+        log = self._store._log
+        events = [e for e in log[self._pos:]
+                  if self._kind is None or e.kind == self._kind]
+        self._pos = len(log)
+        return events
+
+    @property
+    def pending(self) -> bool:
+        return any(self._kind is None or e.kind == self._kind
+                   for e in self._store._log[self._pos:])
+
+
+class ApiStore:
+    """In-memory API server: typed objects, versions, watches."""
+
+    def __init__(self) -> None:
+        self._objects: Dict[Tuple[str, str], ApiObject] = {}
+        self._version = itertools.count(1)
+        self._log: List[WatchEvent] = []
+
+    # -- internals ---------------------------------------------------------
+    def _bump(self, obj: ApiObject, event_type: str) -> ApiObject:
+        obj.meta.resource_version = next(self._version)
+        self._log.append(WatchEvent(event_type, obj.meta.kind, obj.meta.name,
+                                    obj.meta.resource_version, obj))
+        return obj
+
+    def _log_index_after(self, version: int) -> int:
+        for i, e in enumerate(self._log):
+            if e.resource_version > version:
+                return i
+        return len(self._log)
+
+    @staticmethod
+    def kind_of(spec: Any) -> str:
+        kind = KIND_OF.get(type(spec))
+        if kind is None:
+            raise ApiError(f"unregistered API type {type(spec).__name__!r}; "
+                           f"known kinds: {sorted(k.__name__ for k in KIND_OF)}")
+        return kind
+
+    def _check_version(self, obj: ApiObject,
+                       expected: Optional[int]) -> None:
+        if expected is not None and obj.meta.resource_version != expected:
+            raise ConflictError(
+                f"{obj.meta.kind}/{obj.meta.name}: resource version "
+                f"{expected} is stale (now {obj.meta.resource_version})")
+
+    # -- CRUD --------------------------------------------------------------
+    def create(self, spec: Any, name: Optional[str] = None,
+               labels: Optional[Mapping[str, str]] = None) -> ApiObject:
+        kind = self.kind_of(spec)
+        name = name or getattr(spec, "name", None)
+        if not name:
+            raise ApiError(f"{kind} object needs a name")
+        key = (kind, name)
+        if key in self._objects:
+            raise ConflictError(f"{kind}/{name} already exists")
+        obj = ApiObject(meta=ObjectMeta(name=name, kind=kind,
+                                        labels=dict(labels or {})),
+                        spec=spec)
+        self._objects[key] = obj
+        return self._bump(obj, ADDED)
+
+    def get(self, kind: str, name: str) -> ApiObject:
+        try:
+            return self._objects[(kind, name)]
+        except KeyError:
+            raise ApiError(f"{kind}/{name} not found") from None
+
+    def try_get(self, kind: str, name: str) -> Optional[ApiObject]:
+        return self._objects.get((kind, name))
+
+    def list_objects(self, kind: Optional[str] = None,
+                     selector: Optional[Mapping[str, str]] = None
+                     ) -> List[ApiObject]:
+        out = []
+        for (k, _), obj in sorted(self._objects.items()):
+            if kind is not None and k != kind:
+                continue
+            if selector and any(obj.meta.labels.get(lk) != lv
+                                for lk, lv in selector.items()):
+                continue
+            out.append(obj)
+        return out
+
+    def delete(self, kind: str, name: str,
+               resource_version: Optional[int] = None) -> ApiObject:
+        obj = self.get(kind, name)
+        self._check_version(obj, resource_version)
+        del self._objects[(kind, name)]
+        return self._bump(obj, DELETED)
+
+    # -- spec writes (bump generation) -------------------------------------
+    def update_spec(self, kind: str, name: str,
+                    mutate: Callable[[Any], Any],
+                    resource_version: Optional[int] = None) -> ApiObject:
+        """Apply ``mutate`` to the spec payload; marks intent as changed.
+
+        ``mutate`` may modify the payload in place (return None) or
+        return a replacement payload of the same registered type.
+        """
+        obj = self.get(kind, name)
+        self._check_version(obj, resource_version)
+        new_spec = mutate(obj.spec)
+        if new_spec is not None:
+            if self.kind_of(new_spec) != kind:
+                raise ApiError(f"replacement spec for {kind}/{name} has "
+                               f"kind {self.kind_of(new_spec)}")
+            obj.spec = new_spec
+        obj.meta.generation += 1
+        return self._bump(obj, MODIFIED)
+
+    # -- status writes (resource version only) -----------------------------
+    def update_status(self, kind: str, name: str,
+                      mutate: Callable[[ObjectStatus], None]) -> ApiObject:
+        obj = self.get(kind, name)
+        mutate(obj.status)
+        return self._bump(obj, MODIFIED)
+
+    def set_condition(self, kind: str, name: str, cond: Condition) -> bool:
+        """Idempotent condition write. Returns True iff state changed."""
+        obj = self.get(kind, name)
+        existing = obj.status.condition(cond.type)
+        if existing is not None:
+            if existing.same_state(cond):
+                return False
+            if existing.status == cond.status:
+                # same status, new reason/generation: keep old timestamp
+                cond = replace(cond, last_transition=existing.last_transition)
+            obj.status.conditions[obj.status.conditions.index(existing)] = cond
+        else:
+            obj.status.conditions.append(cond)
+        self._bump(obj, MODIFIED)
+        return True
+
+    def set_output(self, kind: str, name: str, key: str, value: Any) -> None:
+        self.update_status(kind, name,
+                           lambda st: st.outputs.__setitem__(key, value))
+
+    # -- watch -------------------------------------------------------------
+    def watch(self, kind: Optional[str] = None,
+              since_version: int = 0) -> Watch:
+        return Watch(self, kind, since_version)
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def resource_version(self) -> int:
+        return self._log[-1].resource_version if self._log else 0
+
+    def __len__(self) -> int:
+        return len(self._objects)
+
+    def __repr__(self) -> str:
+        kinds: Dict[str, int] = {}
+        for (k, _) in self._objects:
+            kinds[k] = kinds.get(k, 0) + 1
+        return f"ApiStore(v{self.resource_version}, {kinds})"

@@ -28,9 +28,38 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
+import zlib
 
 COMMIT_MARKER = "_COMMITTED"
+
+# Preferred codec is recorded in the manifest so restore always uses the
+# codec the checkpoint was written with, whatever this process has.
+DEFAULT_CODEC = "zstd" if zstandard is not None else "zlib"
+
+
+def _compress(blob: bytes, codec: str, level: int) -> bytes:
+    if codec == "zstd":
+        return zstandard.ZstdCompressor(level=level).compress(blob)
+    if codec == "zlib":
+        return zlib.compress(blob, level)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
+
+
+def _decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "module is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    if codec == "zlib":
+        return zlib.decompress(blob)
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
@@ -52,8 +81,8 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     os.makedirs(tmp, exist_ok=True)
 
     leaves = _flatten_with_paths(tree)
-    manifest = {"step": step, "leaves": [], "created": time.time()}
-    cctx = zstandard.ZstdCompressor(level=compress_level)
+    manifest = {"step": step, "leaves": [], "created": time.time(),
+                "codec": DEFAULT_CODEC}
     payload: Dict[str, bytes] = {}
     for key, leaf in leaves:
         arr = np.asarray(jax.device_get(leaf))
@@ -62,7 +91,7 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         payload[key] = arr.tobytes()
     blob = msgpack.packb(payload, use_bin_type=True)
     with open(os.path.join(tmp, "shard_00000.msgpack.zst"), "wb") as f:
-        f.write(cctx.compress(blob))
+        f.write(_compress(blob, DEFAULT_CODEC, compress_level))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
@@ -95,9 +124,9 @@ def restore_checkpoint(directory: str, tree_like: Any,
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")  # pre-tag checkpoints were zstd
     with open(os.path.join(path, "shard_00000.msgpack.zst"), "rb") as f:
-        payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        payload = msgpack.unpackb(_decompress(f.read(), codec), raw=False)
     by_key = {e["key"]: e for e in manifest["leaves"]}
 
     leaves = _flatten_with_paths(tree_like)

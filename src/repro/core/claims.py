@@ -73,7 +73,13 @@ class DeviceRequest:
     allocation_mode: str = "ExactCount"
 
     def __post_init__(self) -> None:
-        if self.count < 1:
+        if self.allocation_mode not in ("ExactCount", "All"):
+            raise ValueError(
+                f"allocation_mode must be 'ExactCount' or 'All', "
+                f"got {self.allocation_mode!r}")
+        # count is meaningless under 'All' (the allocator takes every
+        # matching device), so only ExactCount validates it
+        if self.allocation_mode == "ExactCount" and self.count < 1:
             raise ValueError("count must be >= 1")
         self._compiled = [compile_expr(s) for s in self.selectors]
 
@@ -122,6 +128,20 @@ class ClaimSpec:
     # common DRA case); 'cluster': devices may span nodes (multi-host mesh
     # claims — how this framework requests whole TPU slices).
     topology_scope: str = "node"
+
+    def clone(self) -> "ClaimSpec":
+        """Independent copy (templates must not alias stamped claims)."""
+        return ClaimSpec(
+            requests=[DeviceRequest(name=r.name, device_class=r.device_class,
+                                    selectors=list(r.selectors), count=r.count,
+                                    allocation_mode=r.allocation_mode)
+                      for r in self.requests],
+            constraints=[MatchAttribute(attribute=c.attribute,
+                                        requests=list(c.requests))
+                         for c in self.constraints],
+            config=[DeviceConfig(driver=c.driver, parameters=dict(c.parameters))
+                    for c in self.config],
+            topology_scope=self.topology_scope)
 
 
 @dataclass
@@ -192,4 +212,5 @@ class ResourceClaimTemplate:
 
     def instantiate(self, owner: str) -> ResourceClaim:
         i = next(self._counter)
-        return ResourceClaim(name=f"{self.name}-{owner}-{i}", spec=self.spec)
+        return ResourceClaim(name=f"{self.name}-{owner}-{i}",
+                             spec=self.spec.clone())

@@ -134,14 +134,19 @@ class IciDriver(KNDDriver):
         self.cluster = cluster
 
     def discover(self) -> List[ResourceSlice]:
-        out = []
+        # one slice per host (pool re-publication replaces by
+        # (driver, pool, node), so per-NIC slices would clobber each
+        # other on multi-NIC hosts)
+        out: Dict[str, ResourceSlice] = {}
         fab = self.cluster.fabric
         for comp in fab.components("nic"):
             if not comp.attrs.get("dcn"):
                 continue
             host = comp.attrs["host"]
-            sl = ResourceSlice(driver=self.name, pool=f"pod{comp.attrs['pod']}",
-                               node=host)
+            sl = out.setdefault(
+                host, ResourceSlice(driver=self.name,
+                                    pool=f"pod{comp.attrs['pod']}",
+                                    node=host))
             dev = Device(
                 name=comp.id,
                 attributes=AttributeSet.of({
@@ -152,8 +157,7 @@ class IciDriver(KNDDriver):
                 }))
             dev.set_capacity("bandwidth", "25G")
             sl.add(dev)
-            out.append(sl)
-        return out
+        return list(out.values())
 
     def device_class(self) -> DeviceClass:
         return DeviceClass(self.name, selectors=[f'device.driver == "{self.name}"'])

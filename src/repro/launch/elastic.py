@@ -1,11 +1,13 @@
-"""Elastic re-planning: node failure -> re-claim -> re-plan -> resume.
+"""Elastic re-planning: node failure -> spec edit -> reconcile -> resume.
 
-The KND payoff for fault tolerance (DESIGN.md §2): the inventory is
-declarative, so when a node dies the controller just withdraws its
-ResourceSlices, re-solves the *same claim spec* against the survivors,
-re-plans the mesh (possibly smaller), and resumes from the newest
-committed checkpoint. No imperative per-node reconfiguration — the exact
-contrast to the CNI-daemon lifecycle fragility of §II.
+The KND payoff for fault tolerance, now fully declarative: the elastic
+controller owns ONE ResourceClaim and ONE Workload object in the API
+store. Scale-down after a node failure is a *spec edit* (shrink the
+claim's chip count, shrink the workload's axes); the control plane's
+reconcilers notice the lost devices and the bumped generation, tear the
+stale allocation down, re-allocate against the survivors, re-plan and
+re-attach — no imperative per-node reconfiguration anywhere (the exact
+contrast to the CNI-daemon lifecycle fragility of §II).
 
 Straggler mitigation rides the same path: a STRAGGLER_DETECTED event on
 the bus can be escalated by policy to treat the slow host as failed.
@@ -15,9 +17,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .. import core
+from ..api import ControlPlane, Workload
 from ..core.nri import Event, Events
 from ..topology.tpu import TpuCluster
 
@@ -41,38 +44,76 @@ def largest_mesh_shape(n_chips: int, model_axis: int) -> Tuple[int, int]:
 
 @dataclass
 class ElasticController:
-    """Owns the claim lifecycle across failures."""
+    """Owns the claim + workload objects across failures.
+
+    The imperative lifecycle of the old controller (re-claim, re-solve,
+    re-prepare, re-plan) now lives in the API reconcilers; this class
+    only edits specs and waits for the Workload's ``Ready`` condition.
+    """
 
     cluster: TpuCluster
     registry: core.DriverRegistry
     model_axis: int = 4
     placement: str = "aligned"
-    # populated by plan()
-    claim: Optional[core.ResourceClaim] = None
-    plan: Optional[core.MeshPlan] = None
     events: List[str] = field(default_factory=list)
 
+    CLAIM = "elastic-train"
+    WORKLOAD = "elastic-train-job"
+
     def __post_init__(self) -> None:
-        self.planner = core.MeshPlanner(self.cluster)
-        self.allocator = core.StructuredAllocator(self.registry.pool,
-                                                  self.registry.classes)
+        self.plane = ControlPlane(self.registry, self.cluster)
+        self.plane.sync_inventory()
         self.registry.bus.subscribe(Events.NODE_FAILED, self.on_node_failed,
                                     "elastic-controller")
         self.registry.bus.subscribe(Events.STRAGGLER_DETECTED,
                                     self.on_straggler, "elastic-controller")
 
-    # -- initial plan -------------------------------------------------------
+    # -- declarative state ---------------------------------------------------
+    @property
+    def claim(self) -> Optional[core.ResourceClaim]:
+        obj = self.plane.store.try_get("ResourceClaim", self.CLAIM)
+        return obj.spec if obj is not None else None
+
+    @property
+    def plan(self) -> Optional[core.MeshPlan]:
+        if self.plane.store.try_get("Workload", self.WORKLOAD) is None:
+            return None
+        return self.plane.plan(self.WORKLOAD)
+
+    # -- initial plan / re-plan ----------------------------------------------
+    def _available_chips(self) -> int:
+        """Free TPU chips plus whatever the existing claim still holds.
+
+        Filtered to the TPU driver: the pool also carries DCN NIC
+        devices, which must not inflate the mesh size.
+        """
+        pool = self.registry.pool
+        claim = self.claim
+        mine = claim.uid if claim is not None else None
+        return sum(1 for d in pool.devices(include_allocated=True)
+                   if d.driver == core.TpuDriver.name
+                   and pool.owner(d.id) in (None, mine))
+
     def plan_mesh(self, n_chips: Optional[int] = None) -> core.MeshPlan:
-        avail = len(self.registry.pool.devices())
-        n = n_chips or avail
+        n = n_chips or self._available_chips()
         data, model = largest_mesh_shape(n, self.model_axis)
         n = data * model
-        self.claim = self.planner.make_claim("train", n)
-        self.allocator.allocate(self.claim)
-        self.registry.prepare(self.claim)
         axes = [core.AxisSpec("data", data, "y"),
                 core.AxisSpec("model", model, "x")]
-        self.plan = self.planner.plan(axes, self.placement, self.claim)
+        store = self.plane.store
+        if store.try_get("ResourceClaim", self.CLAIM) is None:
+            self.plane.submit(self.plane.planner.make_claim(self.CLAIM, n))
+            self.plane.submit(
+                Workload(claim=self.CLAIM, axes=axes,
+                         placement=self.placement, build_mesh=False),
+                name=self.WORKLOAD)
+        else:
+            # elastic resize IS a spec edit; reconcilers do the rest
+            self.plane.edit("ResourceClaim", self.CLAIM,
+                            lambda c: setattr(c.spec.requests[0], "count", n))
+            self.plane.edit("Workload", self.WORKLOAD,
+                            lambda w: setattr(w, "axes", axes))
+        self.plane.wait_for("Workload", self.WORKLOAD)
         self.events.append(f"planned {data}x{model}")
         return self.plan
 
@@ -80,12 +121,9 @@ class ElasticController:
     def on_node_failed(self, event: Event) -> Dict[str, Any]:
         node = event.context["node"]
         self.events.append(f"node_failed {node}")
-        # 1. withdraw the node's slices (breaks its allocations)
+        # withdraw the node's slices; the reconcilers see the lost
+        # devices + the shrunk spec and converge on a survivor mesh
         self.registry.pool.withdraw_node(node)
-        # 2. release whatever the old claim still holds
-        if self.claim is not None:
-            self.allocator.deallocate(self.claim)
-        # 3. re-solve on the survivors
         plan = self.plan_mesh()
         self.registry.bus.publish(Events.JOB_RESUMED,
                                   plan=plan, reason=f"lost {node}")
@@ -101,5 +139,6 @@ class ElasticController:
     # -- introspection ------------------------------------------------------
     @property
     def mesh_shape(self) -> Tuple[int, ...]:
-        assert self.plan is not None
-        return self.plan.axis_shape
+        plan = self.plan
+        assert plan is not None
+        return plan.axis_shape

@@ -21,8 +21,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:  # jax >= 0.5 explicit-sharding API
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def mesh_axis_specs(multi_pod: bool = False):
@@ -36,32 +39,29 @@ def mesh_axis_specs(multi_pod: bool = False):
 
 def make_planned_mesh(*, multi_pod: bool = False, placement: str = "aligned",
                       seed: int = 0):
-    """Full KND workflow -> (jax.Mesh, MeshPlan).
+    """Full KND workflow, declaratively -> (jax.Mesh, MeshPlan).
 
-    Discovery publishes slices; a cluster-scoped claim is allocated by the
-    structured allocator; the planner embeds the logical axes into the ICI
-    torus; the OCI runtime executes the declarative attachment.
+    Submits a ResourceClaim + Workload to the API store; the control
+    plane's reconcilers run allocation, NodePrepareResources, the NRI
+    hooks and the OCI attachment, and the mesh is read off the
+    workload's status once its ``Ready`` condition is True.
     """
     from .. import core
+    from ..api import ControlPlane, Workload
     from ..topology.tpu import build_tpu_cluster
 
     num_pods = 2 if multi_pod else 1
     cluster = build_tpu_cluster(num_pods=num_pods)
     reg = core.DriverRegistry()
     reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-    reg.run_discovery()
+    plane = ControlPlane(reg, cluster)
+    plane.run_discovery()
 
-    planner = core.MeshPlanner(cluster)
     n_chips = 512 if multi_pod else 256
-    claim = planner.make_claim(f"mesh-{placement}", n_chips)
-    allocator = core.StructuredAllocator(reg.pool, reg.classes)
-    allocator.allocate(claim)
-    reg.prepare(claim)
-
-    plan = planner.plan(mesh_axis_specs(multi_pod), placement, claim, seed=seed)
-    results = reg.bus.publish(core.Events.RUN_POD_SANDBOX, plan=plan, claim=claim)
-    spec = next(r.value for r in results
-                if r.ok and r.value is not None and r.driver == "dranet.repro.dev")
-    runtime = core.MeshRuntime()
-    mesh = runtime.execute(spec)
-    return mesh, plan
+    claim_name = f"mesh-{placement}"
+    plane.submit(plane.planner.make_claim(claim_name, n_chips))
+    plane.submit(Workload(claim=claim_name, axes=mesh_axis_specs(multi_pod),
+                          placement=placement, seed=seed),
+                 name=f"{claim_name}-job")
+    obj = plane.wait_for("Workload", f"{claim_name}-job")
+    return obj.status.outputs["mesh"], obj.status.outputs["plan"]

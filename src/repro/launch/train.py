@@ -66,27 +66,30 @@ def main() -> None:
     plan = None
     if args.mesh:
         from .. import core
+        from ..api import ControlPlane, Workload
         from ..topology.tpu import TpuPodSpec, build_tpu_cluster
         d, m = (int(x) for x in args.mesh.split("x"))
-        # KND workflow on a pod big enough for the requested grid
+        # declarative KND workflow on a pod big enough for the grid:
+        # submit claim + workload, wait for Ready, read mesh off status
         side = max(d, m)
         cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
         reg = core.DriverRegistry()
         reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-        reg.run_discovery()
-        planner = core.MeshPlanner(cluster)
-        claim = planner.make_claim("train", d * m)
-        core.StructuredAllocator(reg.pool, reg.classes).allocate(claim)
-        reg.prepare(claim)
-        plan = planner.plan([core.AxisSpec("data", d, "y"),
-                             core.AxisSpec("model", m, "x")],
-                            args.placement, claim)
-        results = reg.bus.publish(core.Events.RUN_POD_SANDBOX,
-                                  plan=plan, claim=claim)
-        spec = next(r.value for r in results if r.ok and r.value is not None)
-        mesh = core.MeshRuntime().execute(spec)
+        plane = ControlPlane(reg, cluster)
+        plane.run_discovery()
+        plane.submit(plane.planner.make_claim("train", d * m))
+        plane.submit(Workload(claim="train", placement=args.placement,
+                              axes=[core.AxisSpec("data", d, "y"),
+                                    core.AxisSpec("model", m, "x")],
+                              seed=args.seed),
+                     name="train-job")
+        wl = plane.wait_for("Workload", "train-job")
+        plan = wl.status.outputs["plan"]
+        mesh = wl.status.outputs["mesh"]
         rules = ShardingRules(mesh=mesh)
-        print(f"[knd] {plan.summary()}")
+        lat = wl.status.outputs["phase_latency_s"]
+        print(f"[knd] {plan.summary()}  "
+              f"(submit->Ready {lat['total'] * 1e3:.1f}ms)")
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     trainer = Trainer(cfg, opt, data, step_cfg=sc, ckpt=ckpt,

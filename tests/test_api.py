@@ -1,0 +1,321 @@
+"""Declarative control plane: store semantics, reconcilers, convergence."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import core
+from repro.api import (ApiError, ApiStore, ConflictError, ControlPlane,
+                       Workload, CONDITION_ALLOCATED, CONDITION_ATTACHED,
+                       CONDITION_PREPARED, CONDITION_READY, Condition, TRUE,
+                       FALSE)
+from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, DriverRegistry,
+                        IciDriver, ResourceClaim, ResourceClaimTemplate,
+                        TpuDriver)
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+
+
+def make_plane(side=4):
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster)
+    plane.run_discovery()
+    return plane
+
+
+def chip_claim(name, count):
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
+                                count=count)],
+        topology_scope="cluster"))
+
+
+# ---------------------------------------------------------------------------
+# ApiStore semantics
+# ---------------------------------------------------------------------------
+
+class TestStore:
+    def test_create_bumps_resource_version(self):
+        store = ApiStore()
+        a = store.create(chip_claim("a", 1))
+        b = store.create(chip_claim("b", 1))
+        assert b.meta.resource_version > a.meta.resource_version > 0
+        assert a.meta.kind == "ResourceClaim"
+
+    def test_typed_store_rejects_unknown_payloads(self):
+        store = ApiStore()
+        with pytest.raises(ApiError):
+            store.create({"not": "an api type"}, name="x")
+
+    def test_duplicate_create_conflicts(self):
+        store = ApiStore()
+        store.create(chip_claim("a", 1))
+        with pytest.raises(ConflictError):
+            store.create(chip_claim("a", 1))
+
+    def test_spec_update_bumps_generation_status_does_not(self):
+        store = ApiStore()
+        obj = store.create(chip_claim("a", 2))
+        assert obj.meta.generation == 1
+        store.update_spec("ResourceClaim", "a",
+                          lambda c: setattr(c.spec.requests[0], "count", 4))
+        assert obj.meta.generation == 2
+        rv = obj.meta.resource_version
+        store.set_condition("ResourceClaim", "a",
+                            Condition(CONDITION_ALLOCATED, TRUE,
+                                      observed_generation=2))
+        assert obj.meta.generation == 2          # status write
+        assert obj.meta.resource_version > rv    # ...still versioned
+
+    def test_optimistic_concurrency(self):
+        store = ApiStore()
+        obj = store.create(chip_claim("a", 1))
+        stale = obj.meta.resource_version
+        store.update_spec("ResourceClaim", "a",
+                          lambda c: setattr(c.spec.requests[0], "count", 2))
+        with pytest.raises(ConflictError):
+            store.update_spec("ResourceClaim", "a",
+                              lambda c: setattr(c.spec.requests[0], "count", 3),
+                              resource_version=stale)
+
+    def test_set_condition_is_idempotent(self):
+        store = ApiStore()
+        store.create(chip_claim("a", 1))
+        cond = Condition(CONDITION_ALLOCATED, TRUE, reason="x",
+                         observed_generation=1)
+        assert store.set_condition("ResourceClaim", "a", cond) is True
+        rv = store.resource_version
+        assert store.set_condition("ResourceClaim", "a", cond) is False
+        assert store.resource_version == rv      # no event, no bump
+
+    def test_label_selector_list(self):
+        store = ApiStore()
+        store.create(chip_claim("a", 1), labels={"workload": "w1"})
+        store.create(chip_claim("b", 1), labels={"workload": "w2"})
+        got = store.list_objects("ResourceClaim", selector={"workload": "w1"})
+        assert [o.meta.name for o in got] == ["a"]
+
+    def test_watch_stream_and_replay(self):
+        store = ApiStore()
+        w = store.watch("ResourceClaim")
+        store.create(chip_claim("a", 1))
+        store.update_spec("ResourceClaim", "a",
+                          lambda c: setattr(c.spec.requests[0], "count", 2))
+        store.delete("ResourceClaim", "a")
+        types = [e.type for e in w.poll()]
+        assert types == ["ADDED", "MODIFIED", "DELETED"]
+        assert w.poll() == []                    # cursor advanced
+        # replay from the beginning via since_version
+        types2 = [e.type for e in store.watch("ResourceClaim").poll()]
+        assert types2 == types
+
+    def test_watch_kind_filter(self):
+        store = ApiStore()
+        w = store.watch("Workload")
+        store.create(chip_claim("a", 1))
+        assert w.poll() == []
+
+
+# ---------------------------------------------------------------------------
+# Reconcilers: condition transitions + healing
+# ---------------------------------------------------------------------------
+
+class TestReconcile:
+    def test_condition_transition_order(self):
+        plane = make_plane()
+        plane.submit(chip_claim("c", 8))
+        plane.submit(Workload(claim="c", build_mesh=False,
+                              axes=[AxisSpec("data", 2, "y"),
+                                    AxisSpec("model", 4, "x")]),
+                     name="job")
+        obj = plane.wait_for("Workload", "job")
+        order = [CONDITION_ALLOCATED, CONDITION_PREPARED, CONDITION_ATTACHED,
+                 CONDITION_READY]
+        stamps = [obj.condition(t).last_transition for t in order]
+        assert all(obj.is_true(t, current=True) for t in order)
+        assert stamps == sorted(stamps)          # phases happen in order
+        lat = obj.status.outputs["phase_latency_s"]
+        assert set(order) <= set(lat) and lat["total"] >= 0.0
+
+    def test_claim_conditions_progress(self):
+        plane = make_plane()
+        plane.submit(chip_claim("c", 4))
+        plane.reconcile()
+        cobj = plane.store.get("ResourceClaim", "c")
+        assert cobj.is_true(CONDITION_ALLOCATED, current=True)
+        assert cobj.is_true(CONDITION_PREPARED, current=True)
+        assert cobj.spec.allocated and cobj.spec.prepared
+
+    def test_unsatisfiable_claim_reports_condition(self):
+        plane = make_plane()          # 16 chips
+        plane.submit(chip_claim("big", 64))
+        plane.reconcile()
+        cobj = plane.store.get("ResourceClaim", "big")
+        cond = cobj.condition(CONDITION_ALLOCATED)
+        assert cond.status == FALSE and cond.reason == "Unsatisfiable"
+        # heal by editing the spec down to what the pool has
+        plane.edit("ResourceClaim", "big",
+                   lambda c: setattr(c.spec.requests[0], "count", 8))
+        plane.reconcile()
+        assert cobj.is_true(CONDITION_ALLOCATED, current=True)
+
+    def test_spec_edit_on_running_workload_converges_to_new_mesh(self):
+        """Acceptance: claim spec edit -> controllers alone -> new mesh."""
+        plane = make_plane()
+        plane.submit(chip_claim("c", 16))
+        plane.submit(Workload(claim="c", build_mesh=False,
+                              axes=[AxisSpec("data", 4, "y"),
+                                    AxisSpec("model", 4, "x")]),
+                     name="job")
+        obj = plane.wait_for("Workload", "job")
+        assert plane.plan("job").axis_shape == (4, 4)
+        old_uids = {a.ref.id for a in
+                    plane.store.get("ResourceClaim", "c").spec.allocation.devices}
+        # scale down: the edits are the ONLY imperative act; reconcilers
+        # tear down the stale allocation, re-allocate, re-plan, re-attach
+        plane.edit("ResourceClaim", "c",
+                   lambda c: setattr(c.spec.requests[0], "count", 8))
+        plane.edit("Workload", "job",
+                   lambda w: setattr(w, "axes", [AxisSpec("data", 2, "y"),
+                                                 AxisSpec("model", 4, "x")]))
+        obj = plane.wait_for("Workload", "job")
+        assert plane.plan("job").axis_shape == (2, 4)
+        new_refs = {a.ref.id for a in
+                    plane.store.get("ResourceClaim", "c").spec.allocation.devices}
+        assert len(new_refs) == 8
+        assert obj.is_true(CONDITION_READY, current=True)
+        # pool bookkeeping followed: only 8 devices allocated now
+        assert plane.registry.pool.utilization()[0] == 8
+        assert old_uids != new_refs
+
+    def test_device_loss_heals_without_spec_edit(self):
+        plane = make_plane()
+        plane.submit(chip_claim("c", 8))
+        plane.reconcile()
+        cobj = plane.store.get("ResourceClaim", "c")
+        victim = cobj.spec.allocation.devices[0].ref.node
+        plane.registry.pool.withdraw_node(victim)
+        plane.reconcile()
+        assert cobj.is_true(CONDITION_ALLOCATED, current=True)
+        refs = [a.ref for a in cobj.spec.allocation.devices]
+        assert len(refs) == 8 and all(r.node != victim for r in refs)
+
+    def test_resource_slices_mirrored_and_reaped(self):
+        plane = make_plane()
+        n0 = len(plane.store.list_objects("ResourceSlice"))
+        assert n0 > 0
+        node = plane.registry.pool.nodes()[0]
+        plane.registry.pool.withdraw_node(node)
+        plane.reconcile()
+        slices = plane.store.list_objects("ResourceSlice")
+        assert len(slices) < n0
+        assert all(o.meta.labels["node"] != node for o in slices)
+
+
+# ---------------------------------------------------------------------------
+# Workload replica sets (serve shape)
+# ---------------------------------------------------------------------------
+
+class TestReplicaSet:
+    def make_serve(self, plane, replicas):
+        plane.submit(ResourceClaimTemplate(
+            name="rep", spec=ClaimSpec(
+                requests=[DeviceRequest(name="chips",
+                                        device_class="tpu.google.com",
+                                        count=2)],
+                topology_scope="cluster")))
+        plane.submit(Workload(claim_template="rep", role="serve",
+                              replicas=replicas), name="serve")
+
+    def test_template_stamps_one_claim_per_replica(self):
+        plane = make_plane()
+        self.make_serve(plane, 3)
+        obj = plane.wait_for("Workload", "serve")
+        claims = plane.store.list_objects("ResourceClaim",
+                                          selector={"workload": "serve"})
+        assert len(claims) == 3
+        assert all(c.is_true(CONDITION_PREPARED, current=True) for c in claims)
+        assert obj.status.outputs["claims"] == [c.meta.name for c in claims]
+
+    def test_stamped_claims_do_not_alias_template_spec(self):
+        plane = make_plane()
+        self.make_serve(plane, 2)
+        plane.wait_for("Workload", "serve")
+        claims = plane.store.list_objects("ResourceClaim",
+                                          selector={"workload": "serve"})
+        tmpl = plane.store.get("ResourceClaimTemplate", "rep").spec
+        # editing the template (or one replica) must not mutate live claims
+        tmpl.spec.requests[0].count = 7
+        claims[0].spec.spec.requests[0].count = 5
+        assert claims[1].spec.spec.requests[0].count == 2
+
+    def test_template_workload_rejects_axes(self):
+        with pytest.raises(ValueError):
+            Workload(claim_template="rep", replicas=2,
+                     axes=[AxisSpec("data", 2, "y")])
+
+    def test_scale_up_down_is_a_spec_edit(self):
+        plane = make_plane()
+        self.make_serve(plane, 2)
+        plane.wait_for("Workload", "serve")
+        plane.edit("Workload", "serve", lambda w: setattr(w, "replicas", 4))
+        plane.wait_for("Workload", "serve")
+        assert len(plane.store.list_objects(
+            "ResourceClaim", selector={"workload": "serve"})) == 4
+        assert plane.registry.pool.utilization()[0] == 8
+        plane.edit("Workload", "serve", lambda w: setattr(w, "replicas", 1))
+        plane.wait_for("Workload", "serve")
+        assert len(plane.store.list_objects(
+            "ResourceClaim", selector={"workload": "serve"})) == 1
+        # scale-down released the extra devices
+        assert plane.registry.pool.utilization()[0] == 2
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: DeviceRequest validation, IciDriver slices
+# ---------------------------------------------------------------------------
+
+class TestDeviceRequestValidation:
+    def test_all_mode_ignores_count(self):
+        req = DeviceRequest(name="x", device_class="c",
+                            allocation_mode="All", count=0)
+        assert req.allocation_mode == "All"
+
+    def test_exact_count_still_validated(self):
+        with pytest.raises(ValueError):
+            DeviceRequest(name="x", device_class="c", count=0)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError):
+            DeviceRequest(name="x", device_class="c",
+                          allocation_mode="Some")
+
+
+class TestIciDriverSlices:
+    def test_one_slice_per_host(self):
+        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
+        slices = IciDriver(cluster).discover()
+        nodes = [s.node for s in slices]
+        assert len(nodes) == len(set(nodes))       # one slice per host
+        assert len(slices) == 4                    # 4 hosts on a 4x4 pod
+        assert all(len(s) >= 1 for s in slices)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the declarative quickstart
+# ---------------------------------------------------------------------------
+
+def test_declarative_quickstart_end_to_end():
+    """examples/quickstart.py: submit objects -> Ready -> mesh -> train."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "quickstart.py")],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": os.path.join(root, "src"),
+             "PATH": "/usr/bin:/bin"})
+    assert "Ready=True" in r.stdout, r.stdout + r.stderr
+    assert "mesh attached: {'data': 2, 'model': 4}" in r.stdout, r.stdout
+    assert "done" in r.stdout, r.stdout + r.stderr

@@ -1,6 +1,8 @@
 """CEL-subset engine: semantics, errors, and property-based checks."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.attributes import AttributeSet, Quantity, Version

@@ -62,6 +62,18 @@ class TestElasticReplan:
         assert len(resumed) == 1
         assert resumed[0]["plan"].axis_shape == (2, 4)
 
+    def test_nic_devices_do_not_inflate_mesh(self):
+        """Pool NICs must not count as chips when sizing the mesh."""
+        # 4x14 pod: 56 chips + 14 host NICs; counting NICs (70 devices)
+        # would pick a 16x4=64-chip mesh and fail allocation
+        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=14))
+        reg = DriverRegistry()
+        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        reg.run_discovery()
+        ctl = ElasticController(cluster, reg, model_axis=4)
+        ctl.plan_mesh()
+        assert ctl.mesh_shape == (8, 4)
+
     def test_sequential_failures(self):
         ctl = make_controller()
         ctl.plan_mesh()

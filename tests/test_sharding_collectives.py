@@ -14,9 +14,12 @@ from repro.parallel.sharding import (BASE_RULES, ShardingRules,
 class TestLogicalToPspec:
     def setup_method(self):
         # a fake mesh via namespace: rules.resolve checks mesh axis names
-        self.mesh = jax.make_mesh(
-            (1,), ("model",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is not None:  # jax >= 0.5 explicit-sharding API
+            self.mesh = jax.make_mesh((1,), ("model",),
+                                      axis_types=(axis_type.Auto,))
+        else:
+            self.mesh = jax.make_mesh((1,), ("model",))
 
     def test_missing_axis_dropped(self):
         rules = ShardingRules(mesh=self.mesh)
@@ -63,8 +66,12 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.parallel.collectives import make_compressed_grad_sync, zeros_like_tree
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+axis_type = getattr(jax.sharding, "AxisType", None)
+if axis_type is not None:
+    mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                         axis_types=(axis_type.Auto,)*3)
+else:
+    mesh = jax.make_mesh((2,2,2), ("pod","data","model"))
 def grad_fn(params, batch):
     def loss(p): return jnp.mean((batch["x"] @ p["w"] - batch["y"])**2)
     return jax.grad(loss)(params), {"loss": loss(params)}
