@@ -1,0 +1,220 @@
+"""Control-plane scale sweep: claim churn under three reconcile regimes.
+
+The paper's declarative architecture only pays off if reconciliation
+stays cheap as the cluster grows. This bench drips ``--claims`` claims
+(one submit + reconcile each, the steady arrival pattern of a serving
+cluster) over a synthetic inventory of ``--nodes * --devs`` devices and
+measures claim-churn throughput for:
+
+* **imperative** — direct StructuredAllocator.allocate + registry.prepare
+  (no control plane at all; the floor);
+* **sweep**      — PR-1 reconcile: every round re-examines every object
+  (O(rounds x objects), quadratic over the drip);
+* **event**      — watch-queue reconcile: rounds touch only dirty
+  objects (O(changes)).
+
+It asserts the sweep and event arms produce *identical allocations*,
+then sweeps store size to show per-claim reconcile cost is ~flat for
+the event loop while it grows with store size for the sweep.
+
+  PYTHONPATH=src python -m benchmarks.bench_control_scale           # full
+  PYTHONPATH=src python -m benchmarks.bench_control_scale --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.api import ControlPlane
+from repro.core import (ClaimSpec, DeviceRequest, DriverRegistry,
+                        ResourceClaim, StructuredAllocator)
+from repro.core.attributes import AttributeSet
+from repro.core.drivers import KNDDriver
+from repro.core.claims import DeviceClass
+from repro.core.resources import Device, ResourceSlice
+
+
+class ScaleDriver(KNDDriver):
+    """Synthetic KND driver: a uniform fleet of NIC-like devices."""
+
+    name = "scale.bench.dev"
+
+    def __init__(self, nodes: int, devs_per_node: int):
+        super().__init__()
+        self.nodes = nodes
+        self.devs_per_node = devs_per_node
+
+    def discover(self) -> List[ResourceSlice]:
+        out = []
+        for n in range(self.nodes):
+            node = f"node-{n:04d}"
+            sl = ResourceSlice(driver=self.name, pool="fleet", node=node)
+            for i in range(self.devs_per_node):
+                sl.add(Device(
+                    name=f"dev-{n:04d}-{i:02d}",
+                    attributes=AttributeSet.of({
+                        f"{self.name}/rack": f"rack-{n // 8}",
+                        f"{self.name}/index": i,
+                        f"{self.name}/rdma": True,
+                    })))
+            out.append(sl)
+        return out
+
+    def device_class(self) -> DeviceClass:
+        return DeviceClass(self.name, selectors=[
+            f'device.driver == "{self.name}"',
+            'device.attributes["rdma"] == true'])
+
+
+def make_claim(name: str, count: int) -> ResourceClaim:
+    # the extra selector forces per-candidate CEL work, which is what the
+    # pool's free-device index amortizes
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="devs", device_class=ScaleDriver.name,
+                                selectors=['device.attributes["index"] >= 0'],
+                                count=count)],
+        topology_scope="cluster"))
+
+
+def make_registry(nodes: int, devs: int) -> DriverRegistry:
+    reg = DriverRegistry()
+    reg.add(ScaleDriver(nodes, devs))
+    reg.run_discovery()
+    return reg
+
+
+def assignments_of(plane: ControlPlane) -> Dict[str, List[Tuple[str, str]]]:
+    out = {}
+    for obj in plane.store.list_objects("ResourceClaim"):
+        claim: ResourceClaim = obj.spec
+        out[obj.meta.name] = ([(a.request, a.ref.id)
+                               for a in claim.allocation.devices]
+                              if claim.allocated else None)
+    return out
+
+
+def drip_imperative(nodes: int, devs: int, n_claims: int,
+                    per_claim: int) -> float:
+    reg = make_registry(nodes, devs)
+    alloc = StructuredAllocator(reg.pool, reg.classes)
+    t0 = time.perf_counter()
+    for i in range(n_claims):
+        claim = make_claim(f"c-{i:04d}", per_claim)
+        alloc.allocate(claim)
+        reg.prepare(claim)
+    return time.perf_counter() - t0
+
+
+def drip_declarative(nodes: int, devs: int, n_claims: int, per_claim: int,
+                     mode: str) -> Tuple[float, ControlPlane]:
+    reg = make_registry(nodes, devs)
+    plane = ControlPlane(reg, reconcile_mode=mode)
+    plane.sync_inventory()
+    plane.reconcile()                   # absorb discovery events
+    t0 = time.perf_counter()
+    for i in range(n_claims):
+        plane.submit(make_claim(f"c-{i:04d}", per_claim))
+        plane.reconcile()
+    return time.perf_counter() - t0, plane
+
+
+def churn_cost_vs_store_size(nodes: int, devs: int, per_claim: int,
+                             store_sizes: List[int], churn: int,
+                             mode: str) -> List[Dict[str, float]]:
+    """Per-claim reconcile cost of churning on top of a pre-filled store."""
+    rows = []
+    for size in store_sizes:
+        reg = make_registry(nodes, devs)
+        plane = ControlPlane(reg, reconcile_mode=mode)
+        plane.sync_inventory()
+        for i in range(size):
+            plane.submit(make_claim(f"base-{i:04d}", per_claim))
+        plane.reconcile(max_rounds=max(64, size + 8))
+        t0 = time.perf_counter()
+        for j in range(churn):
+            name = f"churn-{j:04d}"
+            plane.submit(make_claim(name, per_claim))
+            plane.reconcile()
+            claim = plane.store.get("ResourceClaim", name).spec
+            plane.unprepare(claim)
+            plane.allocator.deallocate(claim)
+            plane.store.delete("ResourceClaim", name)
+            plane.reconcile()
+        dt = time.perf_counter() - t0
+        rows.append({"store_claims": size,
+                     "per_claim_ms": round(1e3 * dt / churn, 3)})
+    return rows
+
+
+def run(nodes: int = 64, devs: int = 20, n_claims: int = 512,
+        per_claim: int = 2, churn: int = 64,
+        store_sizes: Optional[List[int]] = None) -> Dict[str, object]:
+    total_devices = nodes * devs
+    assert n_claims * per_claim <= total_devices, "pool too small for drip"
+    store_sizes = store_sizes or [n_claims // 4, n_claims // 2, n_claims]
+
+    imp_s = drip_imperative(nodes, devs, n_claims, per_claim)
+    sweep_s, plane_sweep = drip_declarative(nodes, devs, n_claims,
+                                            per_claim, "sweep")
+    event_s, plane_event = drip_declarative(nodes, devs, n_claims,
+                                            per_claim, "event")
+
+    identical = assignments_of(plane_sweep) == assignments_of(plane_event)
+
+    flat_event = churn_cost_vs_store_size(
+        nodes, devs, per_claim, store_sizes, churn, "event")
+    flat_sweep = churn_cost_vs_store_size(
+        nodes, devs, per_claim, store_sizes, churn, "sweep")
+
+    def tput(seconds: float) -> float:
+        return round(n_claims / seconds, 1)
+
+    return {
+        "bench": "control_scale",
+        "pool_devices": total_devices,
+        "claims": n_claims,
+        "devices_per_claim": per_claim,
+        "identical_allocations": identical,
+        "throughput_claims_per_s": {
+            "imperative": tput(imp_s),
+            "sweep": tput(sweep_s),
+            "event": tput(event_s),
+        },
+        "speedup_event_vs_sweep": round(sweep_s / event_s, 2),
+        "reconcile_calls": {
+            "sweep": plane_sweep.reconcile_calls,
+            "event": plane_event.reconcile_calls,
+        },
+        "churn_per_claim_ms_vs_store_size": {
+            "event": flat_event,
+            "sweep": flat_sweep,
+        },
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--devs", type=int, default=20)
+    ap.add_argument("--claims", type=int, default=512)
+    ap.add_argument("--per-claim", type=int, default=2)
+    ap.add_argument("--churn", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI (fast, still 3 arms)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.nodes, args.devs = 16, 10
+        args.claims, args.churn = 64, 8
+    result = run(nodes=args.nodes, devs=args.devs, n_claims=args.claims,
+                 per_claim=args.per_claim, churn=args.churn)
+    print(json.dumps(result, indent=1))
+    if not result["identical_allocations"]:
+        raise SystemExit("FAIL: sweep and event allocations diverged")
+    return result
+
+
+if __name__ == "__main__":
+    main()

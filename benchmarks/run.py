@@ -11,13 +11,25 @@ Framework perf:
   bench_roofline   -> per-cell roofline terms from the dry-run artifacts
   bench_kernels    -> Pallas kernel micro-bench (interpret-mode wall time
                       is NOT TPU time; correctness + call overhead only)
+  bench_reconcile  -> control-plane overhead per claim (declarative vs
+                      imperative); also feeds BENCH_reconcile.json
+  bench_control_scale -> claim-churn throughput at scale: imperative vs
+                      sweep vs event-driven reconcile
+
+The control-plane sections write ``BENCH_reconcile.json`` at the repo
+root — the perf trajectory CI and reviewers diff across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_reconcile.json")
 
 
 def bench_kernels() -> None:
@@ -53,15 +65,19 @@ def bench_kernels() -> None:
           f"{4096 * 1024 * 8 / (us * 1e-6) / 1e9:.1f}GB/s")
 
 
-SECTIONS = ["startup", "nccl", "placement", "reconcile", "roofline", "kernels"]
+SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
+            "roofline", "kernels"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=SECTIONS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for the control-plane sections")
     args = ap.parse_args()
     chosen = [args.only] if args.only else SECTIONS
 
+    perf: dict = {}
     for section in chosen:
         print(f"\n===== {section} =====")
         if section == "startup":
@@ -75,12 +91,34 @@ def main() -> None:
             bench_placement.main()
         elif section == "reconcile":
             from . import bench_reconcile
-            bench_reconcile.main()
+            result = bench_reconcile.run(reps=2 if args.smoke
+                                         else bench_reconcile.REPS)
+            print(json.dumps(result, indent=1))
+            perf["reconcile"] = result
+        elif section == "control_scale":
+            from . import bench_control_scale
+            perf["control_scale"] = bench_control_scale.main(
+                ["--smoke"] if args.smoke else [])
         elif section == "roofline":
             from . import bench_roofline
             bench_roofline.main()
         elif section == "kernels":
             bench_kernels()
+
+    if perf:
+        merged: dict = {}
+        if os.path.exists(BENCH_JSON):     # --only runs update, not clobber
+            try:
+                with open(BENCH_JSON) as f:
+                    merged = json.load(f)
+            except (OSError, ValueError):
+                merged = {}
+        merged.update(perf)
+        with open(BENCH_JSON, "w") as f:
+            json.dump(merged, f, indent=1)
+            f.write("\n")
+        print(f"\nwrote {BENCH_JSON} "
+              f"(updated: {', '.join(sorted(perf))})")
 
 
 if __name__ == "__main__":

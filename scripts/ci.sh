@@ -13,4 +13,18 @@ python -m pytest -x -q
 echo "== smoke: declarative quickstart =="
 python examples/quickstart.py
 
+echo "== smoke: control-plane scale bench (reduced sizes) =="
+# asserts sweep/event allocation equivalence and surfaces the
+# event-vs-sweep speedup in CI output so perf regressions are visible
+python -m benchmarks.bench_control_scale --smoke \
+  | python -c '
+import json, sys
+r = json.load(sys.stdin)
+assert r["identical_allocations"], "sweep/event allocations diverged"
+print("control_scale:",
+      "event", r["throughput_claims_per_s"]["event"], "claims/s,",
+      "speedup_vs_sweep", str(r["speedup_event_vs_sweep"]) + "x,",
+      "reconcile_calls", r["reconcile_calls"])
+'
+
 echo "CI_OK"

@@ -15,7 +15,8 @@ from .store import (ApiError, ApiStore, ConflictError, Watch, WatchEvent,
                     KIND_OF)
 from .controllers import (AllocationController, AttachmentController,
                           ControlPlane, Controller, PrepareController,
-                          WorkloadController)
+                          WorkloadController, RETRYABLE_REASONS)
+from .workqueue import WorkQueue
 
 __all__ = [
     "ApiObject", "Condition", "ObjectMeta", "ObjectStatus", "Workload",
@@ -25,4 +26,5 @@ __all__ = [
     "ApiError", "ApiStore", "ConflictError", "Watch", "WatchEvent", "KIND_OF",
     "Controller", "AllocationController", "PrepareController",
     "AttachmentController", "WorkloadController", "ControlPlane",
+    "WorkQueue", "RETRYABLE_REASONS",
 ]

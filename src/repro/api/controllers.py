@@ -23,7 +23,7 @@ converge through the same code path (the elastic story of the paper's
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..core.allocator import AllocationError, StructuredAllocator
 from ..core.claims import ResourceClaim
@@ -34,10 +34,22 @@ from ..core.planner import MeshPlanner
 from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
                       CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
-from .store import ApiStore
+from .store import ApiStore, DELETED, WatchEvent
+from .workqueue import WorkQueue
 
 __all__ = ["Controller", "AllocationController", "PrepareController",
-           "AttachmentController", "WorkloadController", "ControlPlane"]
+           "AttachmentController", "WorkloadController", "ControlPlane",
+           "RETRYABLE_REASONS"]
+
+# Condition reasons that mark a reconcile *failure* the controller will
+# retry (as opposed to a normal "waiting for an upstream phase" state).
+# The event loop applies per-object exponential backoff to these, so a
+# claim the inventory can never satisfy stops being re-examined on every
+# slice event.
+RETRYABLE_REASONS = frozenset({
+    "Unsatisfiable", "PlanFailed", "NoPlanner",
+    "TemplateMissing", "ClaimMissing",
+})
 
 
 class Controller:
@@ -319,7 +331,10 @@ class ControlPlane:
 
     def __init__(self, registry: DriverRegistry, cluster: Any = None,
                  store: Optional[ApiStore] = None,
-                 runtime: Optional[MeshRuntime] = None):
+                 runtime: Optional[MeshRuntime] = None,
+                 reconcile_mode: str = "event"):
+        if reconcile_mode not in ("event", "sweep"):
+            raise ValueError(f"unknown reconcile_mode {reconcile_mode!r}")
         self.registry = registry
         self.store = store or ApiStore()
         self.cluster = cluster
@@ -332,6 +347,36 @@ class ControlPlane:
         ]
         self.phase_latencies: Dict[str, Dict[str, float]] = {}
         self._watch = self.store.watch()
+        self.reconcile_mode = reconcile_mode
+        self.queue = WorkQueue()
+        # processing order: claims converge before the workloads rolling
+        # them up (one fewer round per dependency hop)
+        self._kind_order: List[str] = []
+        self._by_kind: Dict[str, List[Controller]] = {}
+        for ctl in self.controllers:
+            if ctl.kind not in self._by_kind:
+                self._kind_order.append(ctl.kind)
+            self._by_kind.setdefault(ctl.kind, []).append(ctl)
+        # dependency edges: claim name -> workload names referencing it
+        self._claim_owners: Dict[str, Set[str]] = {}
+        # template name -> workload names stamping from it
+        self._template_owners: Dict[str, Set[str]] = {}
+        # workload name -> (claim, template) it last referenced, so a
+        # spec edit that repoints a workload drops the stale edge
+        self._wl_refs: Dict[str, Tuple[str, str]] = {}
+        # generation an object last failed at (stale-failure backoff reset)
+        self._failure_gen: Dict[Tuple[str, str], int] = {}
+        # incremental sync_inventory state
+        self._synced_pool_gen: Optional[int] = None
+        self._synced_classes: Set[str] = set()
+        # freed-capacity edge state (see _requeue_on_released_capacity):
+        # claims that settled in a not-Allocated state, maintained by the
+        # event batch loop so the release edge is O(blocked), not O(store)
+        self._seen_release_gen = registry.pool.release_generation
+        self._blocked_claims: Set[str] = set()
+        # telemetry: reconcile() calls per controller (the scale benchmark
+        # and tests read this to prove rounds only touch dirty objects)
+        self.reconcile_calls = 0
 
     # -- inventory ---------------------------------------------------------
     def run_discovery(self) -> int:
@@ -341,10 +386,23 @@ class ControlPlane:
         return n
 
     def sync_inventory(self) -> None:
-        """Mirror device classes + pool ResourceSlices into the store."""
-        for cls in self.registry.classes.values():
-            if self.store.try_get("DeviceClass", cls.name) is None:
-                self.store.create(cls)
+        """Mirror device classes + pool ResourceSlices into the store.
+
+        Incremental: the mirror loop only runs when the pool's inventory
+        generation moved (slice publish / node withdrawal) or a new
+        DeviceClass was registered — so the reconcile loop can call this
+        every round at O(1) steady-state cost instead of re-walking every
+        slice and every mirrored object.
+        """
+        class_names = self.registry.classes.keys()
+        if class_names - self._synced_classes:
+            for cls in self.registry.classes.values():
+                if self.store.try_get("DeviceClass", cls.name) is None:
+                    self.store.create(cls)
+            self._synced_classes = set(class_names)
+        gen = self.registry.pool.inventory_generation
+        if gen == self._synced_pool_gen:
+            return
         live = {}
         for sl in self.registry.pool.slices:
             name = f"{sl.driver}~{sl.pool}~{sl.node}".replace("/", "_")
@@ -359,6 +417,7 @@ class ControlPlane:
         for obj in self.store.list_objects("ResourceSlice"):
             if obj.meta.name not in live:
                 self.store.delete("ResourceSlice", obj.meta.name)
+        self._synced_pool_gen = gen
 
     # -- object submission -------------------------------------------------
     def submit(self, spec: Any, name: Optional[str] = None,
@@ -369,21 +428,255 @@ class ControlPlane:
         """Spec edit: bumps generation; reconcilers converge on it."""
         return self.store.update_spec(kind, name, mutate)
 
+    # -- event routing (dependency edges) ------------------------------------
+    def _requeue_claims_for_nodes(self, nodes: Set[str]) -> None:
+        """Requeue claims a batch of slice changes can unblock or break.
+
+        * claims holding devices on an affected node (loss -> heal);
+        * claims not currently Allocated for their generation (new
+          capacity may satisfy them).
+
+        One claims pass per event pump, however many slices changed —
+        node recovery republishes every slice at once, and a per-event
+        scan would be O(slices x claims).
+        """
+        for obj in self.store.list_objects("ResourceClaim"):
+            claim: ResourceClaim = obj.spec
+            if claim.allocated and any(a.ref.node in nodes
+                                       for a in claim.allocation.devices):
+                self.queue.add("ResourceClaim", obj.meta.name)
+            elif not obj.is_true(CONDITION_ALLOCATED, current=True):
+                self.queue.add("ResourceClaim", obj.meta.name)
+
+    def _route_event(self, e: WatchEvent,
+                     slice_nodes: Optional[Set[str]] = None) -> None:
+        """Translate one watch event into dirty-queue entries.
+
+        ResourceSlice events are *collected* into ``slice_nodes`` (the
+        caller fans them out in one batched claims pass) rather than
+        scanned per event.
+        """
+        q, kind = self.queue, e.kind
+        if kind == "ResourceClaim":
+            if e.type == DELETED:
+                q.forget(kind, e.name)
+                self._failure_gen.pop((kind, e.name), None)
+                self._blocked_claims.discard(e.name)
+            else:
+                q.add(kind, e.name)
+            # claim progress / loss wakes the owning workload(s)
+            owner = e.object.meta.labels.get("workload")
+            owners = set(self._claim_owners.get(e.name, ()))
+            if owner:
+                owners.add(owner)
+            for wl in owners:
+                q.add("Workload", wl)
+            if e.type == DELETED:
+                # prune edges — but keep workloads that still *reference*
+                # this name (they must wake if the claim is re-created)
+                live = {w for w in self._claim_owners.get(e.name, ())
+                        if self._wl_refs.get(w, ("", ""))[0] == e.name}
+                if live:
+                    self._claim_owners[e.name] = live
+                else:
+                    self._claim_owners.pop(e.name, None)
+        elif kind == "Workload":
+            wl: Workload = e.object.spec
+            prev_claim, prev_tmpl = self._wl_refs.get(e.name, ("", ""))
+            if prev_claim and prev_claim != wl.claim:
+                self._claim_owners.get(prev_claim, set()).discard(e.name)
+            if prev_tmpl and prev_tmpl != wl.claim_template:
+                self._template_owners.get(prev_tmpl, set()).discard(e.name)
+            if e.type == DELETED:
+                q.forget(kind, e.name)
+                self._failure_gen.pop((kind, e.name), None)
+                self._wl_refs.pop(e.name, None)
+                if wl.claim:
+                    self._claim_owners.get(wl.claim, set()).discard(e.name)
+                if wl.claim_template:
+                    self._template_owners.get(wl.claim_template,
+                                              set()).discard(e.name)
+                return
+            q.add(kind, e.name)
+            self._wl_refs[e.name] = (wl.claim, wl.claim_template)
+            if wl.claim:
+                self._claim_owners.setdefault(wl.claim, set()).add(e.name)
+                q.add("ResourceClaim", wl.claim)
+            if wl.claim_template:
+                self._template_owners.setdefault(wl.claim_template,
+                                                 set()).add(e.name)
+        elif kind == "ResourceSlice":
+            if slice_nodes is not None:
+                slice_nodes.add(e.object.spec.node)
+            else:
+                self._requeue_claims_for_nodes({e.object.spec.node})
+        elif kind == "DeviceClass":
+            # class (re)definition changes what every claim can match
+            q.add_all("ResourceClaim",
+                      (o.meta.name for o in
+                       self.store.list_objects("ResourceClaim")))
+        elif kind == "ResourceClaimTemplate":
+            q.add_all("Workload", self._template_owners.get(e.name, ()))
+            if e.type == DELETED:
+                live = {w for w in self._template_owners.get(e.name, ())
+                        if self._wl_refs.get(w, ("", ""))[1] == e.name}
+                if live:
+                    self._template_owners[e.name] = live
+                else:
+                    self._template_owners.pop(e.name, None)
+
+    def _update_backoff(self, kind: str, name: str, obj: ApiObject) -> None:
+        """Post-reconcile bookkeeping: backoff + blocked-claim tracking."""
+        if kind == "ResourceClaim":
+            if obj.is_true(CONDITION_ALLOCATED, current=True):
+                self._blocked_claims.discard(name)
+            else:
+                self._blocked_claims.add(name)
+        failing = any(c.status == FALSE and c.reason in RETRYABLE_REASONS
+                      and c.observed_generation == obj.meta.generation
+                      for c in obj.status.conditions)
+        if failing:
+            self._failure_gen[(kind, name)] = obj.meta.generation
+            self.queue.failure(kind, name)
+        else:
+            self._failure_gen.pop((kind, name), None)
+            self.queue.success(kind, name)
+
+    def _requeue_on_released_capacity(self) -> None:
+        """Freed devices may unblock pending claims — requeue them.
+
+        Releases reach the pool through paths that emit no watch event a
+        blocked claim could see (claim deletion, replica scale-down,
+        direct deallocate), so the event loop watches the pool's
+        release generation. Only releases can unblock a claim —
+        allocations never can — and only claims already settled in a
+        not-Allocated state (``_blocked_claims``) can benefit, so this
+        stays O(blocked) per release, O(1) otherwise.
+        """
+        gen = self.registry.pool.release_generation
+        if gen == self._seen_release_gen:
+            return
+        self._seen_release_gen = gen
+        for name in self._blocked_claims:
+            if self.store.try_get("ResourceClaim", name) is not None:
+                self.queue.add("ResourceClaim", name)
+
+    def _pump_events(self) -> None:
+        slice_nodes: Set[str] = set()
+        for e in self._watch.poll():
+            self._route_event(e, slice_nodes)
+            # a spec edit invalidates any backoff from an older generation:
+            # the user changed intent, re-examine immediately
+            key = (e.kind, e.name)
+            if (key in self._failure_gen
+                    and e.object.meta.generation != self._failure_gen[key]):
+                self._failure_gen.pop(key, None)
+                self.queue.success(e.kind, e.name)
+        if slice_nodes:
+            self._requeue_claims_for_nodes(slice_nodes)
+
     # -- reconciliation ----------------------------------------------------
-    def reconcile(self, max_rounds: int = 64) -> int:
-        """Run controllers to a fixpoint; returns rounds taken."""
+    def reconcile(self, max_rounds: int = 64, mode: Optional[str] = None) -> int:
+        """Run controllers to a fixpoint; returns rounds taken.
+
+        ``mode`` (default: the plane's ``reconcile_mode``):
+
+        * ``"event"`` — watch events route into per-kind dirty queues
+          with dependency edges; each round reconciles only dirty
+          objects. O(changes), not O(objects).
+        * ``"sweep"`` — the PR-1 full sweep, kept as the reference arm
+          for the scale benchmark and equivalence tests.
+        """
+        mode = mode or self.reconcile_mode
+        if mode not in ("event", "sweep"):
+            raise ValueError(f"unknown reconcile mode {mode!r}")
+        if mode == "sweep":
+            return self._reconcile_sweep(max_rounds)
+        return self._reconcile_events(max_rounds)
+
+    def _reconcile_events(self, max_rounds: int) -> int:
         for round_no in range(1, max_rounds + 1):
             self.sync_inventory()
-            self._watch.poll()          # drain: this round's baseline
+            self._pump_events()
+            self._requeue_on_released_capacity()
+            batch = self.queue.pop_ready(self._kind_order)
+            if not batch:
+                if self._watch.pending:
+                    continue            # sync/self-writes produced events
+                if self.queue.fast_forward():
+                    continue            # everything dirty is in backoff
+                return round_no
+            done = 0
+            try:
+                for kind, name in batch:
+                    obj = self.store.try_get(kind, name)
+                    if obj is None:
+                        self.queue.forget(kind, name)
+                        done += 1
+                        continue
+                    for ctl in self._by_kind.get(kind, ()):
+                        self.reconcile_calls += 1
+                        ctl.reconcile(self, obj)
+                        if self.store.try_get(kind, name) is None:
+                            break       # deleted by an earlier controller
+                    else:
+                        self._update_backoff(kind, name, obj)
+                    done += 1
+            except BaseException:
+                # pop_ready removed the batch from the dirty sets; an
+                # escaping controller error must not lose the key being
+                # processed or the unprocessed tail (the sweep loop's
+                # re-list-everything behavior made this free)
+                for kind, name in batch[done:]:
+                    self.queue.add(kind, name)
+                raise
+        self._pump_events()             # surface the last round's churn
+        raise self._nonconvergence_error(max_rounds, self.queue.pending())
+
+    def _reconcile_sweep(self, max_rounds: int) -> int:
+        last_changed: List[Tuple[str, str]] = []
+        for round_no in range(1, max_rounds + 1):
+            self.sync_inventory()
+            # drain this round's baseline — still routed, so dependency
+            # indexes (and the dirty queue) stay coherent if the same
+            # plane later reconciles in event mode
+            self._pump_events()
             changed = False
+            last_changed = []
             for ctl in self.controllers:
                 for obj in list(self.store.list_objects(ctl.kind)):
                     if self.store.try_get(obj.meta.kind, obj.meta.name) is None:
                         continue        # deleted by an earlier controller
-                    changed = bool(ctl.reconcile(self, obj)) or changed
+                    self.reconcile_calls += 1
+                    if bool(ctl.reconcile(self, obj)):
+                        changed = True
+                        last_changed.append((obj.meta.kind, obj.meta.name))
             if not changed and not self._watch.pending:
                 return round_no
-        raise RuntimeError(f"reconcile did not converge in {max_rounds} rounds")
+        raise self._nonconvergence_error(max_rounds, last_changed)
+
+    def _nonconvergence_error(self, max_rounds: int,
+                              dirty: List[Tuple[str, str]]) -> RuntimeError:
+        """Name the objects still churning + their last condition moves."""
+        now = time.monotonic()
+        lines = []
+        for kind, name in sorted(set(dirty)):
+            obj = self.store.try_get(kind, name)
+            if obj is None:
+                lines.append(f"  {kind}/{name}: <deleted>")
+                continue
+            conds = obj.status.conditions
+            last = max(conds, key=lambda c: c.last_transition, default=None)
+            detail = (f"last transition {last.type}={last.status} "
+                      f"({last.reason or 'no reason'}) "
+                      f"{now - last.last_transition:.3f}s ago"
+                      if last else "no conditions yet")
+            lines.append(f"  {kind}/{name}[g{obj.meta.generation}]: "
+                         f"{obj.conditions_summary()}; {detail}")
+        detail = "\n".join(lines) or "  <no dirty objects recorded>"
+        return RuntimeError(
+            f"reconcile did not converge in {max_rounds} rounds; "
+            f"{len(set(dirty))} object(s) still dirty:\n{detail}")
 
     def wait_for(self, kind: str, name: str,
                  condition: str = CONDITION_READY) -> ApiObject:

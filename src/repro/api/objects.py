@@ -27,9 +27,10 @@ existing core dataclasses — the store wraps them in an
 from __future__ import annotations
 
 import time
-import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
+
+from ..core.uid import new_uid
 
 __all__ = [
     "TRUE", "FALSE", "UNKNOWN",
@@ -81,7 +82,7 @@ class Condition:
 class ObjectMeta:
     name: str
     kind: str = ""
-    uid: str = field(default_factory=lambda: uuid.uuid4().hex[:12])
+    uid: str = field(default_factory=new_uid)
     resource_version: int = 0    # bumped on every write (watch cursor)
     generation: int = 1          # bumped on spec writes only
     labels: Dict[str, str] = field(default_factory=dict)

@@ -26,6 +26,7 @@ Semantics (deliberately Kubernetes-shaped):
 from __future__ import annotations
 
 import itertools
+from bisect import bisect_right
 from dataclasses import dataclass, replace
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
                     Tuple, Type)
@@ -103,6 +104,7 @@ class ApiStore:
 
     def __init__(self) -> None:
         self._objects: Dict[Tuple[str, str], ApiObject] = {}
+        self._by_kind: Dict[str, Dict[str, ApiObject]] = {}
         self._version = itertools.count(1)
         self._log: List[WatchEvent] = []
 
@@ -114,10 +116,10 @@ class ApiStore:
         return obj
 
     def _log_index_after(self, version: int) -> int:
-        for i, e in enumerate(self._log):
-            if e.resource_version > version:
-                return i
-        return len(self._log)
+        # resource versions are strictly increasing along the log, so the
+        # replay cursor is a binary search, not a linear scan
+        return bisect_right(self._log, version,
+                            key=lambda e: e.resource_version)
 
     @staticmethod
     def kind_of(spec: Any) -> str:
@@ -148,6 +150,7 @@ class ApiStore:
                                         labels=dict(labels or {})),
                         spec=spec)
         self._objects[key] = obj
+        self._by_kind.setdefault(kind, {})[name] = obj
         return self._bump(obj, ADDED)
 
     def get(self, kind: str, name: str) -> ApiObject:
@@ -162,21 +165,28 @@ class ApiStore:
     def list_objects(self, kind: Optional[str] = None,
                      selector: Optional[Mapping[str, str]] = None
                      ) -> List[ApiObject]:
+        if kind is not None:
+            # per-kind index: avoids touching unrelated kinds entirely
+            pool = [(n, o) for n, o in self._by_kind.get(kind, {}).items()]
+        else:
+            pool = [((k, n), o) for (k, n), o in self._objects.items()]
         out = []
-        for (k, _), obj in sorted(self._objects.items()):
-            if kind is not None and k != kind:
-                continue
+        for _, obj in sorted(pool, key=lambda t: t[0]):
             if selector and any(obj.meta.labels.get(lk) != lv
                                 for lk, lv in selector.items()):
                 continue
             out.append(obj)
         return out
 
+    def count(self, kind: str) -> int:
+        return len(self._by_kind.get(kind, {}))
+
     def delete(self, kind: str, name: str,
                resource_version: Optional[int] = None) -> ApiObject:
         obj = self.get(kind, name)
         self._check_version(obj, resource_version)
         del self._objects[(kind, name)]
+        self._by_kind.get(kind, {}).pop(name, None)
         return self._bump(obj, DELETED)
 
     # -- spec writes (bump generation) -------------------------------------

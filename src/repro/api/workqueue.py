@@ -1,0 +1,141 @@
+"""Work queue for event-driven reconciliation: dirty sets + backoff.
+
+The sweep loop of PR 1 re-examined every object of every kind each
+round — O(rounds × objects) even when one claim changed. This module is
+the client-go-shaped replacement: watch events route into per-kind
+*dirty queues*; a reconcile round pops only dirty objects. Dependency
+edges (claim ↔ owning workload, slice → affected claims) live in the
+:class:`~repro.api.controllers.ControlPlane`, which translates one
+event into the set of keys that must be re-examined.
+
+Rate limiting is per-object exponential backoff measured in reconcile
+*rounds* (the loop's native clock — no wall-clock sleeps, so tests stay
+deterministic and fast). The queue does not self-schedule retries —
+level-triggered reconciliation retries when an *event* (slice change,
+freed capacity, spec edit) requeues the object; backoff only gates how
+soon such a requeue is admitted for an object that has been failing,
+with the window growing 1, 2, 4, … rounds per consecutive failure.
+Healthy objects are never delayed. When everything pending is inside a
+backoff window and no new events exist, the loop fast-forwards the
+clock to the earliest deadline instead of spinning through empty
+rounds.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["WorkQueue"]
+
+Key = Tuple[str, str]  # (kind, name)
+
+
+class WorkQueue:
+    """Deduplicated dirty queue with per-object exponential backoff."""
+
+    def __init__(self, backoff_base: int = 1, backoff_cap: int = 16):
+        # kind -> {name: insertion order} — dict doubles as an ordered set
+        self._dirty: Dict[str, Dict[str, None]] = {}
+        self._failures: Dict[Key, int] = {}
+        self._not_before: Dict[Key, int] = {}   # key -> earliest round
+        self._clock = 0                         # current round number
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        # telemetry: how much work the queue actually admitted/deferred
+        self.enqueued = 0
+        self.popped = 0
+        self.deferred = 0
+
+    # -- enqueue -------------------------------------------------------------
+    def add(self, kind: str, name: str) -> None:
+        """Mark (kind, name) dirty; idempotent while already queued."""
+        bucket = self._dirty.setdefault(kind, {})
+        if name not in bucket:
+            bucket[name] = None
+            self.enqueued += 1
+
+    def add_all(self, kind: str, names: Iterable[str]) -> None:
+        for n in names:
+            self.add(kind, n)
+
+    # -- backoff -------------------------------------------------------------
+    def failure(self, kind: str, name: str) -> int:
+        """Record a reconcile failure; returns the delay (rounds) applied."""
+        key = (kind, name)
+        f = self._failures.get(key, 0)
+        delay = min(self.backoff_base << f, self.backoff_cap)
+        self._failures[key] = f + 1
+        self._not_before[key] = self._clock + delay
+        return delay
+
+    def success(self, kind: str, name: str) -> None:
+        """Reset the object's backoff state (it made progress)."""
+        key = (kind, name)
+        self._failures.pop(key, None)
+        self._not_before.pop(key, None)
+
+    def forget(self, kind: str, name: str) -> None:
+        """Drop all queue state for a deleted object."""
+        self.success(kind, name)
+        bucket = self._dirty.get(kind)
+        if bucket is not None:
+            bucket.pop(name, None)
+
+    def failures(self, kind: str, name: str) -> int:
+        return self._failures.get((kind, name), 0)
+
+    # -- dequeue -------------------------------------------------------------
+    def pop_ready(self, kinds: Iterable[str]) -> List[Key]:
+        """Advance the clock one round and pop every ready dirty key.
+
+        ``kinds`` fixes the processing order (the controller priority:
+        claims converge before the workloads that roll them up). Keys
+        still inside their backoff window stay queued for a later round.
+        """
+        self._clock += 1
+        out: List[Key] = []
+        for kind in kinds:
+            bucket = self._dirty.get(kind)
+            if not bucket:
+                continue
+            keep: Dict[str, None] = {}
+            for name in bucket:
+                if self._not_before.get((kind, name), 0) > self._clock:
+                    keep[name] = None
+                    self.deferred += 1
+                else:
+                    out.append((kind, name))
+                    self.popped += 1
+            self._dirty[kind] = keep
+        return out
+
+    def fast_forward(self) -> bool:
+        """Jump the clock to the earliest backoff deadline of a queued key.
+
+        Returns False when nothing queued is waiting on backoff (i.e.
+        there is genuinely no work).
+        """
+        deadlines = [self._not_before[(k, n)]
+                     for k, bucket in self._dirty.items() for n in bucket
+                     if (k, n) in self._not_before]
+        if not deadlines:
+            return False
+        self._clock = max(self._clock, min(deadlines))
+        return True
+
+    # -- introspection ---------------------------------------------------------
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._dirty.values())
+
+    @property
+    def empty(self) -> bool:
+        return len(self) == 0
+
+    def pending(self) -> List[Key]:
+        """Every queued key (ready or in backoff), in kind order."""
+        return [(k, n) for k, bucket in self._dirty.items() for n in bucket]
+
+    def __repr__(self) -> str:
+        return (f"WorkQueue(dirty={len(self)}, clock={self._clock}, "
+                f"enqueued={self.enqueued}, popped={self.popped}, "
+                f"deferred={self.deferred})")

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .claims import (AllocatedDevice, AllocationResult, DeviceClass,
                      DeviceRequest, MatchAttribute, ResourceClaim)
@@ -49,6 +49,12 @@ class StructuredAllocator:
     classes: Mapping[str, DeviceClass]
     score_fn: Optional[ScoreFn] = None
     max_backtrack_steps: int = 200_000
+    # Reference arm: bypass the pool's free-device indexes and the
+    # incremental constraint state, re-scanning the whole inventory and
+    # re-checking every constraint over the full tentative assignment at
+    # each DFS step (the pre-index behavior). The equivalence tests pin
+    # the fast path to this oracle; it is never the production path.
+    naive: bool = False
 
     # -- public api --------------------------------------------------------
     def allocate(self, claim: ResourceClaim, node: Optional[str] = None) -> AllocationResult:
@@ -100,15 +106,24 @@ class StructuredAllocator:
         cls = self.classes.get(req.device_class)
         if cls is None:
             raise AllocationError(f"unknown device class {req.device_class!r}")
-        out = []
-        for d in self.pool.devices(include_allocated=False):
-            if node is not None and d.node != node:
-                continue
-            if cls.matches(d) and req.selector_match(d):
-                out.append(d)
-        # deterministic order → deterministic allocations
-        out.sort(key=lambda d: d.id)
-        return out
+        if self.naive:
+            out = []
+            for d in self.pool.devices(include_allocated=False):
+                if node is not None and d.node != node:
+                    continue
+                if cls.matches(d) and req.selector_match(d):
+                    out.append(d)
+            # deterministic order → deterministic allocations
+            out.sort(key=lambda d: d.id)
+            return out
+        # Indexed fast path: the pool's free-device index evaluates the
+        # CEL selectors once per device per inventory generation and keeps
+        # the free survivors sorted by id, so a candidate list is a copy —
+        # identical contents and order to the naive scan + sort above.
+        key = (req.fingerprint(), tuple(cls.selectors))
+        idx = self.pool.index(
+            key, lambda d: cls.matches(d) and req.selector_match(d))
+        return list(idx.free_devices(node))
 
     def _solve(self, claim: ResourceClaim,
                node: Optional[str]) -> Optional[List[Tuple[str, Device]]]:
@@ -133,16 +148,62 @@ class StructuredAllocator:
         used: set = set()
         steps = [0]
 
-        def ok(req_name: str, dev: Device) -> bool:
-            tentative = assignment + [(req_name, dev)]
-            return all(c.check(tentative) for c in constraints)
+        if self.naive:
+            # reference arm: full re-check of every constraint over the
+            # whole tentative assignment at every step
+            def place(req_name: str, dev: Device) -> bool:
+                tentative = assignment + [(req_name, dev)]
+                return all(c.check(tentative) for c in constraints)
+
+            def unplace(req_name: str, dev: Device) -> None:
+                pass
+        else:
+            # Incremental constraint state: one (running value, count) per
+            # constraint. Placing a device only touches the constraints
+            # that apply to its request; everything already placed has
+            # already been validated, so nothing else needs re-checking.
+            cstate: List[List[Any]] = [[None, 0] for _ in constraints]
+            applicable: Dict[str, List[Tuple[int, MatchAttribute]]] = {
+                req.name: [(ci, c) for ci, c in enumerate(constraints)
+                           if c.applies_to(req.name)]
+                for req in requests}
+
+            def _retract(req_name: str, upto: int) -> None:
+                for ci, _ in applicable[req_name][:upto]:
+                    st = cstate[ci]
+                    st[1] -= 1
+                    if st[1] == 0:
+                        st[0] = None
+
+            def place(req_name: str, dev: Device) -> bool:
+                touched = 0
+                for ci, c in applicable[req_name]:
+                    v = c.value_of(dev)
+                    st = cstate[ci]
+                    if v is None or (st[1] and st[0] != v):
+                        _retract(req_name, touched)
+                        return False
+                    st[0] = v
+                    st[1] += 1
+                    touched += 1
+                return True
+
+            def unplace(req_name: str, dev: Device) -> None:
+                _retract(req_name, len(applicable[req_name]))
+
+        def budget_error() -> AllocationError:
+            counts = ", ".join(f"{r.name}={len(cand[r.name])}"
+                               for r in requests)
+            return AllocationError(
+                f"claim {claim.name}: search budget exceeded "
+                f"({self.max_backtrack_steps} steps); "
+                f"candidates per request: {counts}; "
+                f"constraints: {[c.attribute for c in constraints]}")
 
         def dfs(ri: int, picked_for_current: int) -> bool:
             steps[0] += 1
             if steps[0] > self.max_backtrack_steps:
-                raise AllocationError(
-                    f"claim {claim.name}: search budget exceeded "
-                    f"({self.max_backtrack_steps} steps)")
+                raise budget_error()
             if ri == len(order):
                 return True
             req, want = order[ri]
@@ -151,7 +212,7 @@ class StructuredAllocator:
             for dev in cand[req.name]:
                 if dev.id in used:
                     continue
-                if not ok(req.name, dev):
+                if not place(req.name, dev):
                     continue
                 used.add(dev.id)
                 assignment.append((req.name, dev))
@@ -159,6 +220,7 @@ class StructuredAllocator:
                     return True
                 assignment.pop()
                 used.remove(dev.id)
+                unplace(req.name, dev)
             return False
 
         if not dfs(0, 0):

@@ -28,11 +28,13 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .attributes import AttributeSet, Quantity, Version
 
-__all__ = ["CelError", "CelProgram", "compile_expr", "evaluate"]
+__all__ = ["CelError", "CelProgram", "compile_expr", "evaluate",
+           "compile_cache_info", "compile_cache_clear"]
 
 
 class CelError(Exception):
@@ -550,8 +552,30 @@ class CelProgram:
         return f"CelProgram({self.source!r})"
 
 
-def compile_expr(source: str) -> CelProgram:
+@lru_cache(maxsize=4096)
+def _compile_cached(source: str) -> CelProgram:
     return CelProgram(source, _Parser(_lex(source), source).parse())
+
+
+def compile_expr(source: str) -> CelProgram:
+    """Compile ``source``, memoized module-wide.
+
+    Identical selector strings appear on every claim stamped from a
+    template and on every DeviceClass re-instantiation; the lexer +
+    Pratt parser dominate selector cost, so they run once per distinct
+    string. Safe to share: :class:`CelProgram` holds only the immutable
+    AST — each ``evaluate()`` builds its own environment.
+    """
+    return _compile_cached(source)
+
+
+def compile_cache_info():
+    """(hits, misses, maxsize, currsize) of the compile cache."""
+    return _compile_cached.cache_info()
+
+
+def compile_cache_clear() -> None:
+    _compile_cached.cache_clear()
 
 
 def evaluate(source: str, env: Optional[Dict[str, Any]] = None, **kwargs: Any) -> Any:

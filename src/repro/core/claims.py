@@ -16,12 +16,12 @@ critical path (Fig. 4).
 from __future__ import annotations
 
 import itertools
-import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .cel import CelError, CelProgram, compile_expr
 from .resources import Device, DeviceRef
+from .uid import new_uid
 
 __all__ = [
     "DeviceClass", "DeviceRequest", "MatchAttribute", "DeviceConfig",
@@ -90,6 +90,15 @@ class DeviceRequest:
         except CelError:
             return False
 
+    def fingerprint(self) -> Tuple[str, Tuple[str, ...]]:
+        """Value-based identity of this request's device filter.
+
+        Two requests with the same class and selector strings match the
+        same device set against a given inventory, so allocator candidate
+        caches key on this (plus the pool's inventory generation).
+        """
+        return (self.device_class, tuple(self.selectors))
+
 
 @dataclass
 class MatchAttribute:
@@ -105,6 +114,15 @@ class MatchAttribute:
 
     def applies_to(self, request_name: str) -> bool:
         return not self.requests or request_name in self.requests
+
+    def value_of(self, device: Device) -> Any:
+        """The constrained attribute's value on ``device`` (None = absent).
+
+        The allocator's incremental DFS tracks one running value per
+        constraint; a placement is legal iff ``value_of`` is present and
+        equal to the running value — the stepwise form of :meth:`check`.
+        """
+        return device.attributes.get(self.attribute, None)
 
     def check(self, devices: Sequence[Tuple[str, Device]]) -> bool:
         """devices: (request_name, device) pairs for a tentative allocation."""
@@ -181,7 +199,7 @@ class ResourceClaim:
 
     name: str
     spec: ClaimSpec
-    uid: str = field(default_factory=lambda: uuid.uuid4().hex[:12])
+    uid: str = field(default_factory=new_uid)
     # status
     allocation: Optional[AllocationResult] = None
     prepared: bool = False

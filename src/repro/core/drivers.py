@@ -37,6 +37,16 @@ class KNDDriver:
 
     def __init__(self) -> None:
         self.prepared: Dict[str, Dict[str, Any]] = {}  # claim uid -> cached cfg
+        # Bumped whenever the driver's local inventory changes (hotplug,
+        # reconfiguration). The registry records the generation it last
+        # published, so repeated run_discovery() calls skip drivers whose
+        # inventory is unchanged instead of re-walking + re-publishing.
+        self.inventory_generation = 1
+
+    def bump_inventory(self) -> int:
+        """Mark the local inventory dirty; next run_discovery re-publishes."""
+        self.inventory_generation += 1
+        return self.inventory_generation
 
     # -- DRA ------------------------------------------------------------------
     def discover(self) -> List[ResourceSlice]:
@@ -251,6 +261,12 @@ class DriverRegistry:
     bus: EventBus = field(default_factory=EventBus)
     drivers: Dict[str, KNDDriver] = field(default_factory=dict)
     classes: Dict[str, DeviceClass] = field(default_factory=dict)
+    # driver name -> inventory generation last published into the pool
+    published_generations: Dict[str, int] = field(default_factory=dict)
+    # pool inventory generation right after our last publication; a
+    # mismatch means someone else mutated the pool (e.g. withdraw_node)
+    # and the skip optimization must not suppress re-publication
+    _pool_gen_at_publish: Optional[int] = None
 
     def add(self, driver: KNDDriver) -> "DriverRegistry":
         self.drivers[driver.name] = driver
@@ -264,13 +280,35 @@ class DriverRegistry:
         self.classes[cls.name] = cls
         return self
 
-    def run_discovery(self) -> int:
+    def run_discovery(self, force: bool = False) -> int:
+        """Publish slices from drivers whose inventory generation moved.
+
+        Incremental by default: a driver that has not called
+        :meth:`KNDDriver.bump_inventory` since its last publication is
+        skipped entirely (no discover() walk, no pool re-publication, no
+        pool generation bump), so a reconcile loop can call this every
+        round for pennies. The skip is disabled — everything
+        re-publishes — when the pool was mutated behind the registry's
+        back (``withdraw_node`` on node failure: recovery is another
+        ``run_discovery()`` call, exactly as before the optimization)
+        or when ``force=True``.
+        """
+        if self.pool.inventory_generation != self._pool_gen_at_publish:
+            force = True
         n = 0
+        published = False
         for driver in self.drivers.values():
+            gen = driver.inventory_generation
+            if not force and self.published_generations.get(driver.name) == gen:
+                continue
             for sl in driver.discover():
                 self.pool.publish(sl)
                 n += len(sl)
-        self.bus.publish(Events.DISCOVERY, pool=self.pool)
+                published = True
+            self.published_generations[driver.name] = gen
+        self._pool_gen_at_publish = self.pool.inventory_generation
+        if published or force:
+            self.bus.publish(Events.DISCOVERY, pool=self.pool)
         return n
 
     def prepare(self, claim: ResourceClaim) -> Dict[str, Dict[str, Any]]:

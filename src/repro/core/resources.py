@@ -14,13 +14,14 @@ slices cluster-wide and serves the allocator.
 
 from __future__ import annotations
 
+from bisect import bisect_left
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from .attributes import AttributeSet, Quantity, normalize_attr
 
 __all__ = [
-    "Device", "ResourceSlice", "ResourcePool", "DeviceRef",
+    "Device", "ResourceSlice", "ResourcePool", "DeviceRef", "DeviceIndex",
 ]
 
 
@@ -118,40 +119,152 @@ class ResourceSlice:
         return len(self.devices)
 
 
+class DeviceIndex:
+    """Free-device index for one device filter (class+selector fingerprint).
+
+    Owned and maintained by :class:`ResourcePool`. ``members`` is every
+    device id that matched the filter's predicate against the current
+    inventory; the free lists hold the *unallocated* members, kept
+    **sorted by id** (cluster-wide and per node) so the allocator's
+    candidate lists are a plain copy — no per-allocation sort, no
+    re-evaluation of CEL selectors. The pool maintains the lists on
+    allocate/release (bisect insert/remove); the whole index is rebuilt
+    only when the inventory generation moves (slice publish / node
+    withdrawal).
+    """
+
+    __slots__ = ("key", "members", "_free_all", "_free_by_node", "generation")
+
+    def __init__(self, key: Any) -> None:
+        self.key = key
+        self.members: set = set()                       # matching device ids
+        self._free_all: List[Device] = []               # sorted by id
+        self._free_by_node: Dict[str, List[Device]] = {}  # node -> sorted
+        self.generation = -1                            # inventory gen built at
+
+    def rebuild(self, devices: Iterable[Device],
+                allocated: Mapping[str, str], generation: int) -> None:
+        self.members.clear()
+        free: List[Device] = []
+        for d in devices:
+            self.members.add(d.id)
+            if d.id not in allocated:
+                free.append(d)
+        free.sort(key=_device_id)
+        self._free_all = free
+        self._free_by_node = {}
+        for d in free:
+            self._free_by_node.setdefault(d.node, []).append(d)  # sorted order
+        self.generation = generation
+
+    def mark(self, device: Device, free: bool) -> None:
+        """O(log n) free-list maintenance for one allocate/release."""
+        if device.id not in self.members:
+            return
+        for lst in (self._free_all,
+                    self._free_by_node.setdefault(device.node, [])):
+            i = bisect_left(lst, device.id, key=_device_id)
+            if free:
+                if i >= len(lst) or lst[i].id != device.id:
+                    lst.insert(i, device)
+            elif i < len(lst) and lst[i].id == device.id:
+                del lst[i]
+
+    def free_devices(self, node: Optional[str] = None) -> List[Device]:
+        """Free matching devices, sorted by id (live list — do not mutate)."""
+        if node is not None:
+            return self._free_by_node.get(node, [])
+        return self._free_all
+
+    def free_ids(self, node: Optional[str] = None) -> List[str]:
+        return [d.id for d in self.free_devices(node)]
+
+
+def _device_id(d: Device) -> str:
+    return d.id
+
+
 class ResourcePool:
     """Cluster-wide aggregation of ResourceSlices + allocation bookkeeping.
 
     This plays the role of the scheduler's view of all published slices.
     Allocation state lives here (not on devices) so that re-planning after
     a node failure is just: drop the node's slices, re-run the allocator.
+
+    Hot-path structure: ``_by_id`` gives O(1) device lookup (the
+    controllers probe every allocated device each reconcile);
+    ``inventory_generation`` versions the topology so allocator candidate
+    caches and :class:`DeviceIndex` free sets invalidate only when a slice
+    actually changed, not on every allocation.
     """
+
+    # LRU bound on registered free-device indexes (distinct selector
+    # fingerprints); beyond this, coldest indexes are evicted and simply
+    # rebuilt on next use.
+    MAX_INDEXES = 64
 
     def __init__(self) -> None:
         self._slices: List[ResourceSlice] = []
         self._allocated: Dict[str, str] = {}  # device id -> claim uid
+        self._by_claim: Dict[str, set] = {}   # claim uid -> device ids
+        self._by_id: Dict[str, Device] = {}   # device id -> device
+        self._indexes: Dict[Any, DeviceIndex] = {}
+        self._inventory_gen = 0
+        self._release_gen = 0
 
     # -- publication ------------------------------------------------------
     def publish(self, slice_: ResourceSlice) -> None:
         # re-publication by (driver, pool, node) replaces the old slice
-        self._slices = [
-            s for s in self._slices
-            if not (s.driver == slice_.driver and s.pool == slice_.pool and s.node == slice_.node)
-        ]
-        self._slices.append(slice_)
+        kept = []
+        for s in self._slices:
+            if s.driver == slice_.driver and s.pool == slice_.pool and s.node == slice_.node:
+                for d in s:
+                    self._by_id.pop(d.id, None)
+            else:
+                kept.append(s)
+        kept.append(slice_)
+        self._slices = kept
+        for d in slice_:
+            self._by_id[d.id] = d
+        self._inventory_gen += 1
 
     def withdraw_node(self, node: str) -> List[ResourceSlice]:
         """Remove all slices for a node (node failure / drain). Returns them."""
         gone = [s for s in self._slices if s.node == node]
+        if not gone:
+            return gone
         self._slices = [s for s in self._slices if s.node != node]
         # allocations on vanished devices are implicitly broken; drop them
-        gone_ids = {d.id for s in gone for d in s}
-        self._allocated = {k: v for k, v in self._allocated.items() if k not in gone_ids}
+        for s in gone:
+            for d in s:
+                self._by_id.pop(d.id, None)
+                uid = self._allocated.pop(d.id, None)
+                if uid is not None:
+                    self._by_claim.get(uid, set()).discard(d.id)
+        self._inventory_gen += 1
         return gone
 
     # -- queries ----------------------------------------------------------
     @property
     def slices(self) -> Sequence[ResourceSlice]:
         return tuple(self._slices)
+
+    @property
+    def inventory_generation(self) -> int:
+        """Bumped on publish/withdraw only — NOT on allocate/release."""
+        return self._inventory_gen
+
+    @property
+    def release_generation(self) -> int:
+        """Bumped on release() only — devices returning to the free pool.
+
+        Withdrawal is *not* a release (the devices are gone, not free);
+        it bumps ``inventory_generation`` instead. Only a release can
+        unblock a pending claim — allocations never can — so the event
+        loop watches this (and only this) to requeue unallocated claims
+        when capacity returns, without re-scanning on every allocation.
+        """
+        return self._release_gen
 
     def devices(self, include_allocated: bool = False) -> List[Device]:
         out = []
@@ -165,11 +278,7 @@ class ResourcePool:
         return sorted({s.node for s in self._slices})
 
     def get(self, device_id: str) -> Optional[Device]:
-        for s in self._slices:
-            for d in s:
-                if d.id == device_id:
-                    return d
-        return None
+        return self._by_id.get(device_id)
 
     def is_allocated(self, device_id: str) -> bool:
         return device_id in self._allocated
@@ -177,18 +286,59 @@ class ResourcePool:
     def owner(self, device_id: str) -> Optional[str]:
         return self._allocated.get(device_id)
 
+    # -- free-device indexes ------------------------------------------------
+    def index(self, key: Any, predicate: Callable[[Device], bool]) -> DeviceIndex:
+        """The free-device index for ``key``, (re)built if the inventory moved.
+
+        ``predicate`` is the attribute-level device filter (device-class
+        selectors + request selectors); it is evaluated once per device
+        per inventory generation instead of once per device per allocate
+        call — the CEL evaluations this avoids are the allocator's
+        dominant cost at scale.
+        """
+        idx = self._indexes.pop(key, None)
+        if idx is None and len(self._indexes) >= self.MAX_INDEXES:
+            # LRU eviction: _indexes is insertion-ordered and every hit
+            # re-inserts at the end, so the first key is the coldest.
+            # Bounds both memory and the per-device _index_mark walk when
+            # claims carry unboundedly many distinct selector strings.
+            del self._indexes[next(iter(self._indexes))]
+        if idx is None:
+            idx = DeviceIndex(key)
+        self._indexes[key] = idx
+        if idx.generation != self._inventory_gen:
+            idx.rebuild((d for s in self._slices for d in s
+                         if predicate(d)),
+                        self._allocated, self._inventory_gen)
+        return idx
+
+    def _index_mark(self, device: Device, free: bool) -> None:
+        for idx in self._indexes.values():
+            if idx.generation == self._inventory_gen:
+                idx.mark(device, free)
+
     # -- allocation bookkeeping --------------------------------------------
     def mark_allocated(self, devices: Iterable[Device], claim_uid: str) -> None:
+        devices = list(devices)
         for d in devices:
             if d.id in self._allocated:
                 raise ValueError(f"device {d.id} already allocated to "
                                  f"{self._allocated[d.id]}")
+        for d in devices:
             self._allocated[d.id] = claim_uid
+            self._by_claim.setdefault(claim_uid, set()).add(d.id)
+            self._index_mark(d, free=False)
 
     def release(self, claim_uid: str) -> int:
-        before = len(self._allocated)
-        self._allocated = {k: v for k, v in self._allocated.items() if v != claim_uid}
-        return before - len(self._allocated)
+        ids = self._by_claim.pop(claim_uid, set())
+        for device_id in ids:
+            self._allocated.pop(device_id, None)
+            dev = self._by_id.get(device_id)
+            if dev is not None:
+                self._index_mark(dev, free=True)
+        if ids:
+            self._release_gen += 1
+        return len(ids)
 
     def utilization(self) -> Tuple[int, int]:
         total = sum(len(s) for s in self._slices)

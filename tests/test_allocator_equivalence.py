@@ -1,0 +1,193 @@
+"""Indexed/cached allocator == naive scan oracle, property-style.
+
+The PR-2 fast path (pool free-device indexes, candidate caching,
+incremental MatchAttribute state in the DFS) must be *behaviorally
+invisible*: across randomized inventories, device classes, selectors
+and constraint sets, it must produce byte-identical assignments to the
+pre-refactor naive scan — and identical failures when no assignment
+exists. Plain seeded ``random`` keeps this dependency-free (hypothesis
+is optional in this environment).
+"""
+
+import random
+
+import pytest
+
+from repro.core import (AllocationError, ClaimSpec, DeviceRequest,
+                        ResourceClaim, StructuredAllocator)
+from repro.core.attributes import AttributeSet
+from repro.core.claims import DeviceClass, MatchAttribute
+from repro.core.resources import Device, ResourcePool, ResourceSlice
+
+RACKS = ("r0", "r1", "r2")
+MODELS = ("m-a", "m-b")
+
+
+def build_inventory(rng: random.Random):
+    """A randomized but reproducible pool + classes (same seed == same world)."""
+    pool = ResourcePool()
+    n_nodes = rng.randint(2, 5)
+    for n in range(n_nodes):
+        node = f"node-{n}"
+        sl = ResourceSlice(driver="drv", pool=f"p{n % 2}", node=node)
+        for i in range(rng.randint(2, 7)):
+            attrs = {
+                "drv/rack": rng.choice(RACKS),
+                "drv/model": rng.choice(MODELS),
+                "drv/index": i,
+            }
+            if rng.random() < 0.8:          # sometimes absent -> constraint fail
+                attrs["drv/pciRoot"] = f"pci{rng.randint(0, 2)}"
+            sl.add(Device(name=f"d{n}-{i}", attributes=AttributeSet.of(attrs)))
+        pool.publish(sl)
+    classes = {
+        "any": DeviceClass("any", selectors=['device.driver == "drv"']),
+        "model-a": DeviceClass("model-a", selectors=[
+            'device.attributes["model"] == "m-a"']),
+    }
+    return pool, classes
+
+
+def build_claims(rng: random.Random, n_claims: int):
+    claims = []
+    for c in range(n_claims):
+        n_reqs = rng.randint(1, 2)
+        reqs = []
+        for r in range(n_reqs):
+            sel = []
+            if rng.random() < 0.4:
+                sel.append(f'device.attributes["index"] >= {rng.randint(0, 2)}')
+            reqs.append(DeviceRequest(
+                name=f"req{r}", device_class=rng.choice(["any", "model-a"]),
+                selectors=sel, count=rng.randint(1, 3)))
+        constraints = []
+        if rng.random() < 0.5:
+            constraints.append(MatchAttribute(
+                attribute=rng.choice(["rack", "pciRoot"]),
+                requests=[r.name for r in reqs if rng.random() < 0.8]))
+        claims.append(ResourceClaim(
+            name=f"claim-{c}",
+            spec=ClaimSpec(requests=reqs, constraints=constraints,
+                           topology_scope=rng.choice(["node", "cluster"]))))
+    return claims
+
+
+def run_sequence(seed: int, naive: bool):
+    """Allocate a claim sequence; returns per-claim outcome strings."""
+    rng = random.Random(seed)
+    pool, classes = build_inventory(rng)
+    claims = build_claims(rng, n_claims=8)
+    alloc = StructuredAllocator(pool, classes, naive=naive)
+    out = []
+    for claim in claims:
+        try:
+            res = alloc.allocate(claim)
+            out.append(("ok", res.node,
+                        tuple((a.request, a.ref.id) for a in res.devices)))
+        except AllocationError as e:
+            out.append(("err", str(e)))
+        # randomly free some claims to exercise index maintenance
+        if rng.random() < 0.3 and claim.allocated:
+            alloc.deallocate(claim)
+            out.append(("freed", claim.name))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_indexed_allocator_matches_naive_scan(seed):
+    assert run_sequence(seed, naive=False) == run_sequence(seed, naive=True)
+
+
+@pytest.mark.parametrize("seed", [3, 11, 19])
+def test_fast_path_deterministic_across_runs(seed):
+    assert run_sequence(seed, naive=False) == run_sequence(seed, naive=False)
+
+
+def test_incremental_constraints_force_backtracking():
+    """Crafted case: the first greedy pick violates a later constraint,
+    so the DFS must unwind incremental state correctly."""
+    pool = ResourcePool()
+    sl = ResourceSlice(driver="drv", pool="p", node="n0")
+    # a0 is lexicographically first but shares no rack with any b-device
+    sl.add(Device(name="a0", attributes=AttributeSet.of({"drv/rack": "rX",
+                                                         "drv/kind": "a"})))
+    sl.add(Device(name="a1", attributes=AttributeSet.of({"drv/rack": "r0",
+                                                         "drv/kind": "a"})))
+    sl.add(Device(name="b0", attributes=AttributeSet.of({"drv/rack": "r0",
+                                                         "drv/kind": "b"})))
+    pool.publish(sl)
+    classes = {
+        "a": DeviceClass("a", selectors=['device.attributes["kind"] == "a"']),
+        "b": DeviceClass("b", selectors=['device.attributes["kind"] == "b"']),
+    }
+    spec = ClaimSpec(
+        requests=[DeviceRequest(name="ra", device_class="a", count=1),
+                  DeviceRequest(name="rb", device_class="b", count=1)],
+        constraints=[MatchAttribute(attribute="rack")])
+    for naive in (False, True):
+        alloc = StructuredAllocator(pool, classes, naive=naive)
+        claim = ResourceClaim(name=f"c-{naive}", spec=spec.clone())
+        res = alloc.allocate(claim)
+        got = sorted(a.ref.id.split("/")[-1] for a in res.devices)
+        assert got == ["a1", "b0"]
+        alloc.deallocate(claim)
+
+
+def test_budget_error_reports_candidate_counts():
+    """Satellite: the backtracking-budget error names per-request candidate
+    counts so infeasible claims are debuggable."""
+    pool = ResourcePool()
+    sl = ResourceSlice(driver="drv", pool="p", node="n0")
+    for i in range(6):
+        sl.add(Device(name=f"d{i}", attributes=AttributeSet.of(
+            {"drv/rack": f"r{i}"})))      # all racks distinct -> unsat
+    pool.publish(sl)
+    classes = {"any": DeviceClass("any", selectors=['device.driver == "drv"'])}
+    claim = ResourceClaim(name="c", spec=ClaimSpec(
+        requests=[DeviceRequest(name="x", device_class="any", count=2),
+                  DeviceRequest(name="y", device_class="any", count=2)],
+        constraints=[MatchAttribute(attribute="rack")]))
+    alloc = StructuredAllocator(pool, classes, max_backtrack_steps=3)
+    with pytest.raises(AllocationError) as ei:
+        alloc.allocate(claim)
+    msg = str(ei.value)
+    assert "search budget exceeded" in msg
+    assert "candidates per request" in msg
+    assert "x=6" in msg and "y=6" in msg
+    assert "rack" in msg
+
+
+def test_pool_index_cache_is_bounded():
+    """Unbounded distinct selector fingerprints must not grow _indexes
+    (and with it the per-device _index_mark walk) without limit."""
+    pool = ResourcePool()
+    sl = ResourceSlice(driver="drv", pool="p", node="n0",
+                       devices=[Device(name="d0")])
+    pool.publish(sl)
+    for i in range(pool.MAX_INDEXES * 2):
+        pool.index(f"key-{i}", lambda d: True)
+    assert len(pool._indexes) == pool.MAX_INDEXES
+    # an evicted index is transparently rebuilt on next use
+    idx = pool.index("key-0", lambda d: True)
+    assert set(idx.free_ids()) == {"drv/p/d0"}
+
+
+def test_pool_index_maintained_on_allocate_release():
+    pool = ResourcePool()
+    sl = ResourceSlice(driver="drv", pool="p", node="n0")
+    for i in range(4):
+        sl.add(Device(name=f"d{i}"))
+    pool.publish(sl)
+    idx = pool.index("all", lambda d: True)
+    assert len(set(idx.free_ids())) == 4
+    devs = pool.devices()[:2]
+    pool.mark_allocated(devs, "claim-1")
+    assert len(set(pool.index("all", lambda d: True).free_ids())) == 2
+    pool.release("claim-1")
+    assert len(set(pool.index("all", lambda d: True).free_ids())) == 4
+    # topology change invalidates: a republished slice is re-scanned
+    sl2 = ResourceSlice(driver="drv", pool="p", node="n0",
+                        devices=[Device(name="only")])
+    pool.publish(sl2)
+    assert set(pool.index("all", lambda d: True).free_ids()) == {
+        "drv/p/only"}

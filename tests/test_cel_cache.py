@@ -1,0 +1,46 @@
+"""compile_expr LRU cache: hits are real and semantics are unchanged.
+
+Separate from test_cel.py because that module is skipped entirely when
+the optional hypothesis dependency is missing; the cache satellite must
+be exercised everywhere.
+"""
+
+from repro.core.cel import (CelProgram, compile_cache_clear,
+                            compile_cache_info, compile_expr, evaluate)
+
+
+class TestCompileCache:
+    def setup_method(self):
+        compile_cache_clear()
+
+    def test_identical_sources_compile_once(self):
+        src = 'device.attributes["rdma"] == true'
+        p1 = compile_expr(src)
+        p2 = compile_expr(src)
+        assert p1 is p2                       # shared program, one parse
+        info = compile_cache_info()
+        assert info.hits == 1 and info.misses == 1
+
+    def test_cache_hits_do_not_change_semantics(self):
+        src = "a + b * 2"
+        fresh = CelProgram(src, compile_expr(src).ast)   # bypasses cache
+        cached = compile_expr(src)
+        for env in ({"a": 1, "b": 2}, {"a": -3, "b": 10}, {"a": 0, "b": 0}):
+            assert cached.evaluate(dict(env)) == fresh.evaluate(dict(env))
+        # a shared program is environment-independent: interleaved
+        # evaluations with different envs don't bleed into each other
+        assert compile_expr(src).evaluate(a=1, b=1) == 3
+        assert compile_expr(src).evaluate(a=5, b=0) == 5
+
+    def test_distinct_sources_are_distinct_programs(self):
+        assert compile_expr("1 + 1") is not compile_expr("1+1")
+        assert evaluate("1 + 1") == evaluate("1+1") == 2
+
+    def test_macro_env_isolation_under_sharing(self):
+        """List-macro loop variables must not leak between evaluations of
+        the one shared program."""
+        src = "[1, 2, 3].map(v, v * k)"
+        p = compile_expr(src)
+        assert p.evaluate(k=2) == [2, 4, 6]
+        assert compile_expr(src).evaluate(k=10) == [10, 20, 30]
+        assert compile_cache_info().hits >= 1

@@ -1,0 +1,303 @@
+"""Event-driven reconcile: dirty queues, dependency edges, backoff."""
+
+import pytest
+
+from repro.api import (ControlPlane, Workload, WorkQueue,
+                       CONDITION_ALLOCATED, CONDITION_READY)
+from repro.api.controllers import Controller
+from repro.core import (ClaimSpec, DeviceRequest, DriverRegistry, IciDriver,
+                        ResourceClaim, TpuDriver)
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+
+
+def make_plane(side=4, **kwargs):
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster, **kwargs)
+    plane.run_discovery()
+    return plane
+
+
+def chip_claim(name, count):
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
+                                count=count)],
+        topology_scope="cluster"))
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue unit semantics
+# ---------------------------------------------------------------------------
+
+class TestWorkQueue:
+    def test_add_is_deduplicated(self):
+        q = WorkQueue()
+        q.add("ResourceClaim", "a")
+        q.add("ResourceClaim", "a")
+        q.add("ResourceClaim", "b")
+        assert len(q) == 2
+        assert q.pop_ready(["ResourceClaim"]) == [("ResourceClaim", "a"),
+                                                  ("ResourceClaim", "b")]
+        assert q.empty
+
+    def test_pop_order_follows_kind_priority(self):
+        q = WorkQueue()
+        q.add("Workload", "w")
+        q.add("ResourceClaim", "c")
+        popped = q.pop_ready(["ResourceClaim", "Workload"])
+        assert popped == [("ResourceClaim", "c"), ("Workload", "w")]
+
+    def test_backoff_defers_then_readmits(self):
+        q = WorkQueue()
+        q.add("ResourceClaim", "flappy")
+        assert q.pop_ready(["ResourceClaim"]) == [("ResourceClaim", "flappy")]
+        q.failure("ResourceClaim", "flappy")       # delay 1 round
+        q.failure("ResourceClaim", "flappy")       # delay 2 rounds (from now)
+        q.add("ResourceClaim", "flappy")
+        assert q.pop_ready(["ResourceClaim"]) == []      # still backing off
+        assert q.deferred > 0
+        assert q.fast_forward() is True                  # jump to deadline
+        assert q.pop_ready(["ResourceClaim"]) == [("ResourceClaim", "flappy")]
+
+    def test_success_resets_backoff(self):
+        q = WorkQueue()
+        for _ in range(4):
+            q.failure("ResourceClaim", "x")
+        assert q.failures("ResourceClaim", "x") == 4
+        q.success("ResourceClaim", "x")
+        assert q.failures("ResourceClaim", "x") == 0
+        q.add("ResourceClaim", "x")
+        assert q.pop_ready(["ResourceClaim"]) == [("ResourceClaim", "x")]
+
+    def test_forget_drops_queue_state(self):
+        q = WorkQueue()
+        q.add("ResourceClaim", "gone")
+        q.failure("ResourceClaim", "gone")
+        q.forget("ResourceClaim", "gone")
+        assert q.empty and q.failures("ResourceClaim", "gone") == 0
+
+    def test_backoff_caps(self):
+        q = WorkQueue(backoff_base=1, backoff_cap=4)
+        delays = [q.failure("ResourceClaim", "x") for _ in range(6)]
+        assert delays == [1, 2, 4, 4, 4, 4]
+
+
+# ---------------------------------------------------------------------------
+# Event-driven ControlPlane
+# ---------------------------------------------------------------------------
+
+class TestEventReconcile:
+    def test_rounds_touch_only_dirty_objects(self):
+        """The tentpole property: adding claim N+1 must not re-reconcile
+        the N already-converged claims (sweep mode does exactly that)."""
+        plane = make_plane()
+        for i in range(6):
+            plane.submit(chip_claim(f"c{i}", 1))
+        plane.reconcile()
+        before = plane.reconcile_calls
+        plane.submit(chip_claim("late", 1))
+        plane.reconcile()
+        delta = plane.reconcile_calls - before
+        # the new claim is examined a handful of times (claim controllers x
+        # settle rounds), never the ~12+ a sweep over 7 claims would cost
+        assert delta <= 6, delta
+
+    def test_sweep_mode_still_converges(self):
+        plane = make_plane(reconcile_mode="sweep")
+        plane.submit(chip_claim("c", 4))
+        plane.reconcile()
+        obj = plane.store.get("ResourceClaim", "c")
+        assert obj.is_true(CONDITION_ALLOCATED, current=True)
+
+    def test_event_and_sweep_reach_identical_state(self):
+        results = {}
+        for mode in ("event", "sweep"):
+            plane = make_plane(reconcile_mode=mode)
+            plane.submit(chip_claim("c", 4))
+            plane.submit(Workload(claim="c", build_mesh=False), name="job")
+            plane.wait_for("Workload", "job")
+            claim = plane.store.get("ResourceClaim", "c").spec
+            results[mode] = sorted(a.ref.id for a in claim.allocation.devices)
+        assert results["event"] == results["sweep"]
+
+    def test_claim_progress_requeues_owning_workload(self):
+        plane = make_plane()
+        plane.submit(chip_claim("c", 2))
+        plane.submit(Workload(claim="c", build_mesh=False), name="job")
+        obj = plane.wait_for("Workload", "job")
+        assert obj.is_true(CONDITION_READY, current=True)
+        # the dependency edge was recorded from the Workload event
+        assert "job" in plane._claim_owners["c"]
+
+    def test_slice_change_requeues_unsatisfiable_claim(self):
+        """New capacity arriving via a slice event wakes blocked claims."""
+        plane = make_plane(side=2)            # 4 chips
+        plane.submit(chip_claim("big", 8))
+        plane.reconcile()
+        cobj = plane.store.get("ResourceClaim", "big")
+        assert not cobj.is_true(CONDITION_ALLOCATED)
+        # grow the cluster: a second registry discovery publishes more chips
+        bigger = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
+        plane.registry.drivers["tpu.google.com"].cluster = bigger
+        plane.registry.drivers["tpu.google.com"].bump_inventory()
+        plane.registry.run_discovery()
+        plane.reconcile()
+        assert cobj.is_true(CONDITION_ALLOCATED, current=True)
+
+    def test_unsatisfiable_claim_accumulates_backoff(self):
+        plane = make_plane(side=2)
+        plane.submit(chip_claim("big", 64))
+        plane.reconcile()
+        assert plane.queue.failures("ResourceClaim", "big") >= 1
+
+    def test_spec_edit_clears_backoff(self):
+        plane = make_plane(side=2)            # 4 chips
+        plane.submit(chip_claim("big", 64))
+        plane.reconcile()
+        assert plane.queue.failures("ResourceClaim", "big") >= 1
+        plane.edit("ResourceClaim", "big",
+                   lambda c: setattr(c.spec.requests[0], "count", 2))
+        plane.reconcile()
+        cobj = plane.store.get("ResourceClaim", "big")
+        assert cobj.is_true(CONDITION_ALLOCATED, current=True)
+        assert plane.queue.failures("ResourceClaim", "big") == 0
+
+    def test_incremental_sync_inventory_is_quiet(self):
+        """Steady state: reconcile emits no store writes at all."""
+        plane = make_plane()
+        plane.submit(chip_claim("c", 2))
+        plane.reconcile()
+        rv = plane.store.resource_version
+        plane.reconcile()
+        plane.reconcile()
+        assert plane.store.resource_version == rv
+
+    def test_freed_capacity_requeues_pending_claim(self):
+        """A release (claim delete / deallocate) must wake blocked claims
+        in event mode exactly as a sweep would discover them."""
+        plane = make_plane(side=2)            # 4 chips
+        plane.submit(chip_claim("a", 4))
+        plane.reconcile()
+        plane.submit(chip_claim("b", 4))      # pool exhausted by a
+        plane.reconcile()
+        bobj = plane.store.get("ResourceClaim", "b")
+        assert not bobj.is_true(CONDITION_ALLOCATED)
+        claim_a = plane.store.get("ResourceClaim", "a").spec
+        plane.unprepare(claim_a)
+        plane.allocator.deallocate(claim_a)
+        plane.store.delete("ResourceClaim", "a")
+        plane.reconcile()
+        assert bobj.is_true(CONDITION_ALLOCATED, current=True)
+
+    def test_run_discovery_restores_withdrawn_node(self):
+        """Node recovery: withdraw_node then run_discovery must republish
+        even though no driver bumped its inventory generation."""
+        plane = make_plane(side=4)
+        total = plane.registry.pool.utilization()[1]
+        node = plane.registry.pool.nodes()[0]
+        plane.registry.pool.withdraw_node(node)
+        assert plane.registry.pool.utilization()[1] < total
+        plane.registry.run_discovery()
+        assert plane.registry.pool.utilization()[1] == total
+        plane.reconcile()                     # store mirror follows
+
+    def test_repointed_workload_drops_stale_owner_edge(self):
+        plane = make_plane()
+        plane.submit(chip_claim("old", 1))
+        plane.submit(chip_claim("new", 1))
+        plane.submit(Workload(claim="old", build_mesh=False), name="job")
+        plane.wait_for("Workload", "job")
+        assert "job" in plane._claim_owners["old"]
+        plane.edit("Workload", "job", lambda w: setattr(w, "claim", "new"))
+        plane.wait_for("Workload", "job")
+        assert "job" not in plane._claim_owners.get("old", set())
+        assert "job" in plane._claim_owners["new"]
+
+    def test_deleted_claim_prunes_owner_edges_but_keeps_referencers(self):
+        plane = make_plane()
+        plane.submit(chip_claim("c", 1))
+        plane.submit(Workload(claim="c", build_mesh=False), name="job")
+        plane.wait_for("Workload", "job")
+        # delete the workload first: the claim's edge set must empty out
+        plane.store.delete("Workload", "job")
+        claim = plane.store.get("ResourceClaim", "c").spec
+        plane.unprepare(claim)
+        plane.allocator.deallocate(claim)
+        plane.store.delete("ResourceClaim", "c")
+        plane.reconcile()
+        assert "c" not in plane._claim_owners
+        # but a live workload still referencing a deleted claim keeps its
+        # edge, so re-creating the claim wakes it
+        plane.submit(Workload(claim="c", build_mesh=False), name="job2")
+        plane.reconcile()
+        assert "job2" in plane._claim_owners["c"]
+        plane.submit(chip_claim("c", 1))
+        obj = plane.wait_for("Workload", "job2")
+        assert obj.is_true(CONDITION_READY, current=True)
+
+    def test_unknown_reconcile_mode_rejected(self):
+        plane = make_plane()
+        with pytest.raises(ValueError):
+            plane.reconcile(mode="swep")
+        with pytest.raises(ValueError):
+            ControlPlane(plane.registry, reconcile_mode="Sweep")
+
+    def test_controller_crash_does_not_lose_dirty_keys(self):
+        """An escaping controller error must leave the in-flight and
+        unprocessed keys queued, so the next reconcile still converges."""
+
+        class CrashOnce(Controller):
+            kind = "ResourceClaim"
+            name = "crash-once"
+
+            def __init__(self):
+                self.armed = True
+
+            def reconcile(self, plane, obj):
+                if self.armed:
+                    self.armed = False
+                    raise OSError("driver hiccup")
+                return False
+
+        plane = make_plane()
+        crash = CrashOnce()
+        # run the crasher first so the claim's real controllers never act
+        plane._by_kind["ResourceClaim"].insert(0, crash)
+        plane.submit(chip_claim("c1", 1))
+        plane.submit(chip_claim("c2", 1))
+        with pytest.raises(OSError):
+            plane.reconcile()
+        assert len(plane.queue) >= 2          # nothing was dropped
+        plane.reconcile()                     # crash disarmed: converges
+        for name in ("c1", "c2"):
+            obj = plane.store.get("ResourceClaim", name)
+            assert obj.is_true(CONDITION_ALLOCATED, current=True)
+
+    def test_nonconvergence_names_dirty_objects(self):
+        """Satellite: the non-convergence error is debuggable — it names
+        the flapping object and its last condition transition."""
+
+        class FlappingController(Controller):
+            kind = "ResourceClaim"
+            name = "flapping-controller"
+
+            def __init__(self):
+                self.flips = 0
+
+            def reconcile(self, plane, obj):
+                self.flips += 1
+                return self._set(plane, obj, "Flap", self.flips % 2 == 0,
+                                 f"Flip{self.flips}")
+
+        plane = make_plane()
+        plane.controllers.append(FlappingController())
+        plane._by_kind["ResourceClaim"].append(plane.controllers[-1])
+        plane.submit(chip_claim("flappy", 1))
+        with pytest.raises(RuntimeError) as ei:
+            plane.reconcile(max_rounds=8)
+        msg = str(ei.value)
+        assert "did not converge in 8 rounds" in msg
+        assert "ResourceClaim/flappy" in msg
+        assert "last transition" in msg
+        assert "Flap" in msg
