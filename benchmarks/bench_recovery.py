@@ -1,0 +1,182 @@
+"""Durability pricing: WAL append overhead + recovery latency vs size.
+
+Two questions the durable control plane must answer (ISSUE 3 acceptance):
+
+* **WAL overhead** — how much does journaling every store event (WAL
+  append + periodic snapshot compaction) cost per reconcile round? The
+  drip workload of ``bench_control_scale`` runs twice, with and without
+  a journal attached; the target is <= 10% of event-mode reconcile
+  throughput.
+* **Recovery latency** — how long does ``ControlPlane.recover`` (replay
+  snapshot + WAL, re-derive pool allocation bookkeeping, adopt in-flight
+  workloads, reconcile to a fixpoint) take as the store grows from 128
+  to 2048 objects? Each recovery is verified byte-identical: the
+  recovered claims' allocations and their ``Allocated`` condition
+  history must match the pre-crash store exactly, with zero
+  re-allocations during the convergence pass.
+
+  PYTHONPATH=src python -m benchmarks.bench_recovery           # full
+  PYTHONPATH=src python -m benchmarks.bench_recovery --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.api import ControlPlane, allocation_records
+
+from .bench_control_scale import ScaleDriver, make_claim, make_registry
+
+
+def drip(nodes: int, devs: int, n_claims: int, per_claim: int,
+         state_dir: Optional[str] = None) -> Tuple[float, ControlPlane]:
+    """Claim drip (submit + reconcile each) -> (seconds, plane)."""
+    reg = make_registry(nodes, devs)
+    plane = ControlPlane(reg, state_dir=state_dir)
+    plane.sync_inventory()
+    plane.reconcile()                   # absorb discovery events
+    if plane.journal is not None:
+        # flush the one-time discovery records (slices, classes) so the
+        # timed window prices steady-state claim churn, not setup
+        plane.journal.sync()
+        plane.journal.spent_s = 0.0
+    t0 = time.perf_counter()
+    for i in range(n_claims):
+        plane.submit(make_claim(f"c-{i:04d}", per_claim))
+        plane.reconcile()
+    if plane.journal is not None:
+        plane.journal.sync()            # charge the tail flush to the WAL arm
+    return time.perf_counter() - t0, plane
+
+
+def bench_wal_overhead(nodes: int, devs: int, n_claims: int,
+                       per_claim: int, reps: int = 3) -> Dict[str, object]:
+    """WAL cost per reconcile round, two ways.
+
+    ``overhead_pct`` uses the journal's own instrumented serialization/
+    write time (``StoreJournal.spent_s``) over the best plain-arm wall
+    time — noise-free on shared containers, where back-to-back wall
+    clocks of sub-second runs can swing ±50%. The raw wall-clock delta
+    is reported alongside for reference.
+    """
+    base_s = min(drip(nodes, devs, n_claims, per_claim)[0]
+                 for _ in range(reps))
+    best: Dict[str, object] = {}
+    for _ in range(reps):
+        state_dir = tempfile.mkdtemp(prefix="bench-recovery-wal-")
+        try:
+            wal_s, plane = drip(nodes, devs, n_claims, per_claim,
+                                state_dir=state_dir)
+            journal = plane.journal
+            row = {
+                "journaled_s": round(wal_s, 4),
+                "journal_spent_s": round(journal.spent_s, 4),
+                "wal_records": journal.wal.records,
+                "wal_frames": journal.wal.frames,
+                "wal_bytes": journal.wal.bytes_written,
+                "fsyncs": journal.wal.fsyncs,
+                "snapshots": journal.snapshots,
+                "events_seen": journal.events_seen,
+            }
+            journal.close()
+            if not best or row["journal_spent_s"] < best["journal_spent_s"]:
+                best = row
+        finally:
+            shutil.rmtree(state_dir, ignore_errors=True)
+    spent = best["journal_spent_s"]
+    return {
+        "plain_s": round(base_s, 4),
+        **best,
+        "per_claim_overhead_us": round(1e6 * spent / n_claims, 1),
+        "overhead_pct": round(100.0 * spent / base_s, 2),
+        "wallclock_delta_pct": round(
+            100.0 * (best["journaled_s"] - base_s) / base_s, 2),
+    }
+
+
+def bench_recovery_latency(nodes: int, devs: int, per_claim: int,
+                           store_sizes: List[int]) -> List[Dict[str, object]]:
+    rows = []
+    for size in store_sizes:
+        state_dir = tempfile.mkdtemp(prefix="bench-recovery-")
+        try:
+            reg = make_registry(nodes, devs)
+            plane = ControlPlane(reg, state_dir=state_dir)
+            plane.sync_inventory()
+            for i in range(size):
+                plane.submit(make_claim(f"c-{i:05d}", per_claim))
+            plane.reconcile(max_rounds=max(64, size + 8))
+            plane.journal.sync()
+            pre = allocation_records(plane.store)
+            plane.journal.close()
+
+            reg2 = make_registry(nodes, devs)
+            t0 = time.perf_counter()
+            plane2 = ControlPlane.recover(state_dir, reg2,
+                                          resume_journal=False)
+            recover_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            rounds = plane2.reconcile(max_rounds=max(64, size + 8))
+            converge_s = time.perf_counter() - t1
+            post = allocation_records(plane2.store)
+            rows.append({
+                "objects": len(plane2.store),
+                "claims": size,
+                "recover_ms": round(recover_s * 1e3, 2),
+                "converge_ms": round(converge_s * 1e3, 2),
+                "converge_rounds": rounds,
+                "adopted": plane2.adoption_stats["adopted"],
+                # byte-identical allocations + untouched condition history
+                "identical": pre == post,
+            })
+        finally:
+            shutil.rmtree(state_dir, ignore_errors=True)
+    return rows
+
+
+def run(nodes: int = 256, devs: int = 16, n_claims: int = 1024,
+        per_claim: int = 2,
+        store_sizes: Optional[List[int]] = None) -> Dict[str, object]:
+    store_sizes = store_sizes or [128, 256, 512, 1024, 2048]
+    assert max(store_sizes) * per_claim <= nodes * devs, "pool too small"
+    assert n_claims * per_claim <= nodes * devs, "pool too small for drip"
+    overhead = bench_wal_overhead(nodes, devs, n_claims, per_claim)
+    latency = bench_recovery_latency(nodes, devs, per_claim, store_sizes)
+    return {
+        "bench": "recovery",
+        "pool_devices": nodes * devs,
+        "wal_overhead": overhead,
+        "recovery": latency,
+        "all_identical": all(r["identical"] for r in latency),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=256)
+    ap.add_argument("--devs", type=int, default=16)
+    ap.add_argument("--claims", type=int, default=1024)
+    ap.add_argument("--per-claim", type=int, default=2)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for CI")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.nodes, args.devs, args.claims = 32, 8, 96
+        sizes = [32, 64, 128]
+    else:
+        sizes = [128, 256, 512, 1024, 2048]
+    result = run(nodes=args.nodes, devs=args.devs, n_claims=args.claims,
+                 per_claim=args.per_claim, store_sizes=sizes)
+    print(json.dumps(result, indent=1))
+    if not result["all_identical"]:
+        raise SystemExit("FAIL: recovered allocations diverged")
+    return result
+
+
+if __name__ == "__main__":
+    main()

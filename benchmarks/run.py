@@ -15,6 +15,9 @@ Framework perf:
                       imperative); also feeds BENCH_reconcile.json
   bench_control_scale -> claim-churn throughput at scale: imperative vs
                       sweep vs event-driven reconcile
+  bench_recovery   -> WAL append overhead per reconcile round + crash
+                      recovery latency vs store size (byte-identical
+                      adoption check)
 
 The control-plane sections write ``BENCH_reconcile.json`` at the repo
 root — the perf trajectory CI and reviewers diff across PRs.
@@ -66,7 +69,7 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "roofline", "kernels"]
+            "recovery", "roofline", "kernels"]
 
 
 def main() -> None:
@@ -98,6 +101,10 @@ def main() -> None:
         elif section == "control_scale":
             from . import bench_control_scale
             perf["control_scale"] = bench_control_scale.main(
+                ["--smoke"] if args.smoke else [])
+        elif section == "recovery":
+            from . import bench_recovery
+            perf["recovery"] = bench_recovery.main(
                 ["--smoke"] if args.smoke else [])
         elif section == "roofline":
             from . import bench_roofline

@@ -14,12 +14,23 @@ allocate/prepare/attach by hand. We *submit API objects* and wait for a
   6. the WorkloadController flips Ready; a (tiny) model trains on the
      mesh read off the workload's status.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--state-dir DIR]
+
+With ``--state-dir`` the store is journaled (WAL + snapshots); a second
+run against the same directory *recovers* it and adopts the in-flight
+claim instead of re-allocating (see docs/RECOVERY.md).
 """
 
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--state-dir", default=None,
+                help="durable control-plane state (WAL + snapshots); an "
+                     "existing directory is recovered and adopted")
+args = ap.parse_args()
 
 import jax
 import jax.numpy as jnp
@@ -34,27 +45,31 @@ from repro.train.optimizer import AdamW
 from repro.train.schedule import constant_schedule
 from repro.train.train_step import StepConfig, init_train_state, make_train_step
 
-# 1. discovery ------------------------------------------------------------
+# 1. discovery (or recovery + adoption of a previous run's state) ----------
 cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=2))
 registry = core.DriverRegistry()
 registry.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-plane = ControlPlane(registry, cluster)
-n = plane.run_discovery()
-print(f"[1] discovery: {n} devices published as "
-      f"{len(plane.store.list_objects('ResourceSlice'))} ResourceSlice "
-      f"objects ({len(registry.pool.nodes())} nodes)")
+plane = ControlPlane.open(args.state_dir, registry, cluster,
+                          announce=lambda m: print(f"[1] {m}"))
+if plane.recovery_info is None:
+    print(f"[1] discovery: {sum(len(s) for s in registry.pool.slices)} "
+          f"devices published as "
+          f"{len(plane.store.list_objects('ResourceSlice'))} ResourceSlice "
+          f"objects ({len(registry.pool.nodes())} nodes)")
 
 # 2. submit declarative intent: a claim with CEL selection + a workload ----
-plane.submit(core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
-    requests=[core.DeviceRequest(
-        name="chips", device_class="tpu.google.com", count=8,
-        selectors=['device.attributes["generation"] == "v5e"',
-                   'device.capacity["hbm"] >= "8Gi"'])],
-    topology_scope="cluster")))
-plane.submit(Workload(claim="quickstart",
-                      axes=[core.AxisSpec("data", 2, "y"),
-                            core.AxisSpec("model", 4, "x")]),
-             name="quickstart-job")
+if plane.store.try_get("ResourceClaim", "quickstart") is None:
+    plane.submit(core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
+        requests=[core.DeviceRequest(
+            name="chips", device_class="tpu.google.com", count=8,
+            selectors=['device.attributes["generation"] == "v5e"',
+                       'device.capacity["hbm"] >= "8Gi"'])],
+        topology_scope="cluster")))
+if plane.store.try_get("Workload", "quickstart-job") is None:
+    plane.submit(Workload(claim="quickstart",
+                          axes=[core.AxisSpec("data", 2, "y"),
+                                core.AxisSpec("model", 4, "x")]),
+                 name="quickstart-job")
 print(f"[2] submitted ResourceClaim/quickstart + Workload/quickstart-job "
       f"(store v{plane.store.resource_version})")
 

@@ -10,8 +10,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== smoke: declarative quickstart =="
-python examples/quickstart.py
+echo "== smoke: declarative quickstart (journaled) =="
+python examples/quickstart.py --state-dir "$(mktemp -d)/state"
+
+echo "== smoke: kill-and-recover (WAL crash recovery) =="
+python scripts/kill_recover_smoke.py
 
 echo "== smoke: control-plane scale bench (reduced sizes) =="
 # asserts sweep/event allocation equivalence and surfaces the
@@ -25,6 +28,21 @@ print("control_scale:",
       "event", r["throughput_claims_per_s"]["event"], "claims/s,",
       "speedup_vs_sweep", str(r["speedup_event_vs_sweep"]) + "x,",
       "reconcile_calls", r["reconcile_calls"])
+'
+
+echo "== smoke: recovery bench (reduced sizes) =="
+# asserts byte-identical adoption at every store size and surfaces the
+# WAL overhead so durability-cost regressions are visible in CI output
+python -m benchmarks.bench_recovery --smoke \
+  | python -c '
+import json, sys
+r = json.load(sys.stdin)
+assert r["all_identical"], "recovered allocations diverged"
+o = r["wal_overhead"]
+print("recovery:",
+      "wal_overhead", str(o["overhead_pct"]) + "%",
+      "(" + str(o["per_claim_overhead_us"]) + "us/claim),",
+      "recover_ms@" + str(r["recovery"][-1]["claims"]), r["recovery"][-1]["recover_ms"])
 '
 
 echo "CI_OK"

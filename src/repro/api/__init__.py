@@ -11,11 +11,16 @@ from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus,
                       Workload, TRUE, FALSE, UNKNOWN,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
                       CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
-from .store import (ApiError, ApiStore, ConflictError, Watch, WatchEvent,
-                    KIND_OF)
+from .store import (AdmissionError, ApiError, ApiStore, ConflictError, Watch,
+                    WatchEvent, KIND_OF)
 from .controllers import (AllocationController, AttachmentController,
                           ControlPlane, Controller, PrepareController,
                           WorkloadController, RETRYABLE_REASONS)
+from .persistence import (RecoveryError, RecoveryInfo, StoreJournal,
+                          WriteAheadLog, allocation_fingerprint,
+                          allocation_records, dump_store, has_state,
+                          load_store, recover_store, store_dump_json,
+                          store_fingerprint)
 from .workqueue import WorkQueue
 
 __all__ = [
@@ -23,8 +28,13 @@ __all__ = [
     "TRUE", "FALSE", "UNKNOWN",
     "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
     "CONDITION_READY", "PHASE_ORDER",
-    "ApiError", "ApiStore", "ConflictError", "Watch", "WatchEvent", "KIND_OF",
+    "AdmissionError", "ApiError", "ApiStore", "ConflictError", "Watch",
+    "WatchEvent", "KIND_OF",
     "Controller", "AllocationController", "PrepareController",
     "AttachmentController", "WorkloadController", "ControlPlane",
     "WorkQueue", "RETRYABLE_REASONS",
+    "RecoveryError", "RecoveryInfo", "StoreJournal", "WriteAheadLog",
+    "allocation_fingerprint", "allocation_records", "dump_store",
+    "has_state", "load_store", "recover_store", "store_dump_json",
+    "store_fingerprint",
 ]

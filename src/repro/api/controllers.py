@@ -34,7 +34,7 @@ from ..core.planner import MeshPlanner
 from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
                       CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
-from .store import ApiStore, DELETED, WatchEvent
+from .store import AdmissionError, ApiStore, DELETED, WatchEvent
 from .workqueue import WorkQueue
 
 __all__ = ["Controller", "AllocationController", "PrepareController",
@@ -48,7 +48,7 @@ __all__ = ["Controller", "AllocationController", "PrepareController",
 # slice event.
 RETRYABLE_REASONS = frozenset({
     "Unsatisfiable", "PlanFailed", "NoPlanner",
-    "TemplateMissing", "ClaimMissing",
+    "TemplateMissing", "ClaimMissing", "AdmissionRejected",
 })
 
 
@@ -226,33 +226,50 @@ class WorkloadController(Controller):
     name = "workload-controller"
 
     def _replica_claims(self, plane: "ControlPlane", obj: ApiObject
-                        ) -> Optional[List[ApiObject]]:
+                        ) -> Tuple[Optional[List[ApiObject]], str]:
+        """Converge owned claims on spec.replicas -> (claims, admission msg).
+
+        ``claims`` is None when the template is missing; a non-empty
+        second element reports an admission rejection that capped the
+        replica set below spec (the workload stays not-Ready and retries
+        under backoff — capacity may be published later).
+        """
         wl: Workload = obj.spec
         store = plane.store
         tmpl = store.try_get("ResourceClaimTemplate", wl.claim_template)
         if tmpl is None:
-            return None
+            return None, ""
+        admission_msg = ""
         owned = store.list_objects("ResourceClaim",
                                    selector={"workload": obj.meta.name})
         while len(owned) < wl.replicas:
             claim = tmpl.spec.instantiate(owner=obj.meta.name)
-            owned.append(store.create(claim,
-                                      labels={"workload": obj.meta.name}))
+            try:
+                owned.append(store.create(claim,
+                                          labels={"workload": obj.meta.name}))
+            except AdmissionError as e:
+                # strip the stamped claim's name (counter-suffixed) so the
+                # surfaced condition message is stable across retries —
+                # an ever-changing message would never reach a fixpoint
+                admission_msg = str(e).split(
+                    "rejected at admission: ", 1)[-1][:240]
+                break
         while len(owned) > wl.replicas:
             extra = owned.pop()
             plane.unprepare(extra.spec)
             if extra.spec.allocated:
                 plane.allocator.deallocate(extra.spec)
             store.delete("ResourceClaim", extra.meta.name)
-        return owned
+        return owned, admission_msg
 
     def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
         wl: Workload = obj.spec
         store = plane.store
         changed = False
+        admission_msg = ""
         if wl.claim_template:
             prior = store.resource_version
-            claims = self._replica_claims(plane, obj)
+            claims, admission_msg = self._replica_claims(plane, obj)
             if claims is None:
                 return self._set(plane, obj, CONDITION_READY, False,
                                  "TemplateMissing",
@@ -267,15 +284,17 @@ class WorkloadController(Controller):
                                  f"no ResourceClaim {wl.claim!r}")
             claims = [cobj]
         n = len(claims)
-        all_alloc = all(c.is_true(CONDITION_ALLOCATED, current=True)
-                        for c in claims)
-        all_prep = all(c.is_true(CONDITION_PREPARED, current=True)
-                       for c in claims)
+        # an empty replica set (admission rejected every stamp) has
+        # nothing allocated, not vacuously everything
+        all_alloc = n > 0 and all(c.is_true(CONDITION_ALLOCATED, current=True)
+                                  for c in claims)
+        all_prep = n > 0 and all(c.is_true(CONDITION_PREPARED, current=True)
+                                 for c in claims)
 
         def mirror_ts(phase: str, ok: bool) -> Optional[float]:
             # a roll-up condition transitions when the LAST claim did,
             # not when this controller happened to observe it
-            if not ok:
+            if not ok or n == 0:
                 return None
             return max(c.condition(phase).last_transition for c in claims)
 
@@ -292,14 +311,18 @@ class WorkloadController(Controller):
         needs_attach = bool(wl.claim and wl.axes)
         attached = (obj.is_true(CONDITION_ATTACHED, current=True)
                     if needs_attach else all_prep)
-        ready = all_alloc and all_prep and attached
+        ready = all_alloc and all_prep and attached and not admission_msg
         was_ready = obj.is_true(CONDITION_READY, current=True)
-        blocker = (CONDITION_ALLOCATED if not all_alloc else
-                   CONDITION_PREPARED if not all_prep else
-                   CONDITION_ATTACHED)
+        if admission_msg:
+            reason, message = "AdmissionRejected", admission_msg
+        else:
+            blocker = (CONDITION_ALLOCATED if not all_alloc else
+                       CONDITION_PREPARED if not all_prep else
+                       CONDITION_ATTACHED)
+            reason = "Converged" if ready else f"Blocked:{blocker}"
+            message = f"{n} claim(s), role={wl.role}" if ready else ""
         changed |= self._set(plane, obj, CONDITION_READY, ready,
-                             "Converged" if ready else f"Blocked:{blocker}",
-                             f"{n} claim(s), role={wl.role}" if ready else "")
+                             reason, message)
         if ready and not was_ready:
             store.set_output(self.kind, obj.meta.name, "claims",
                              [c.meta.name for c in claims])
@@ -332,7 +355,9 @@ class ControlPlane:
     def __init__(self, registry: DriverRegistry, cluster: Any = None,
                  store: Optional[ApiStore] = None,
                  runtime: Optional[MeshRuntime] = None,
-                 reconcile_mode: str = "event"):
+                 reconcile_mode: str = "event",
+                 state_dir: Optional[str] = None,
+                 admission: bool = True):
         if reconcile_mode not in ("event", "sweep"):
             raise ValueError(f"unknown reconcile_mode {reconcile_mode!r}")
         self.registry = registry
@@ -377,6 +402,165 @@ class ControlPlane:
         # telemetry: reconcile() calls per controller (the scale benchmark
         # and tests read this to prove rounds only touch dirty objects)
         self.reconcile_calls = 0
+        # admission: reject claims that exceed a DeviceClass capacity
+        # summary at create time (ROADMAP validation item)
+        self._capacity_gen = -1
+        self._capacity: Dict[str, int] = {}
+        if admission:
+            self.store.add_validator(self._admission_validate)
+        # durability: WAL journal flushed at every reconcile fixpoint
+        self.journal = None
+        self.recovery_info = None
+        if state_dir is not None:
+            self.attach_journal(state_dir)
+
+    # -- admission ---------------------------------------------------------
+    def _class_capacity(self, class_name: str) -> Optional[int]:
+        """Capacity summary: devices (allocated or not) matching a class.
+
+        Recomputed per inventory generation; ``None`` when the class is
+        unknown to the registry (it may be registered later — the
+        level-triggered runtime path will report Unsatisfiable).
+        """
+        cls = self.registry.classes.get(class_name)
+        if cls is None:
+            return None
+        gen = self.registry.pool.inventory_generation
+        if gen != self._capacity_gen:
+            self._capacity = {}
+            self._capacity_gen = gen
+        if class_name not in self._capacity:
+            self._capacity[class_name] = sum(
+                1 for d in self.registry.pool.devices(include_allocated=True)
+                if cls.matches(d))
+        return self._capacity[class_name]
+
+    def _admission_validate(self, kind: str, spec: Any) -> None:
+        """Reject statically infeasible claims at ``store.create`` time.
+
+        Only fires when the class summary is positive: a zero summary is
+        indistinguishable from "discovery has not run yet", and rejecting
+        those would break submit-before-discovery (level-triggered)
+        workflows.
+        """
+        if kind != "ResourceClaim":
+            return
+        for req in spec.spec.requests:
+            if req.allocation_mode != "ExactCount":
+                continue
+            total = self._class_capacity(req.device_class)
+            if total and req.count > total:
+                raise AdmissionError(
+                    f"claim {spec.name!r} rejected at admission: request "
+                    f"{req.name!r} wants {req.count} × "
+                    f"{req.device_class!r} but the class capacity summary "
+                    f"is {total} device(s)")
+
+    # -- durability --------------------------------------------------------
+    def attach_journal(self, state_dir: str, **journal_kw: Any):
+        """Journal this plane's store into ``state_dir`` (WAL + snapshots)."""
+        from .persistence import StoreJournal
+        self.journal = StoreJournal(self.store, state_dir, **journal_kw)
+        self.journal.attach(resume=len(self.store) > 0)
+        return self.journal
+
+    @classmethod
+    def open(cls, state_dir: Optional[str], registry: DriverRegistry,
+             cluster: Any = None, announce=print,
+             **kw: Any) -> "ControlPlane":
+        """Recovered-or-fresh plane: the entry-point front door.
+
+        A ``state_dir`` holding state is recovered (and announced);
+        otherwise a fresh plane is built — journaled when ``state_dir``
+        is set, plain when None — with discovery already run.
+        """
+        from .persistence import has_state
+        if state_dir and has_state(state_dir):
+            plane = cls.recover(state_dir, registry, cluster, **kw)
+            if announce is not None:
+                announce(f"[knd] recovered "
+                         f"{plane.recovery_info.summary()}; "
+                         f"adopted {plane.adoption_stats}")
+            return plane
+        plane = cls(registry, cluster, state_dir=state_dir, **kw)
+        plane.run_discovery()
+        return plane
+
+    @classmethod
+    def recover(cls, state_dir: str, registry: DriverRegistry,
+                cluster: Any = None, runtime: Optional[MeshRuntime] = None,
+                reconcile_mode: str = "event", admission: bool = True,
+                resume_journal: bool = True,
+                **journal_kw: Any) -> "ControlPlane":
+        """Rebuild a control plane from a persisted state directory.
+
+        Replays snapshot + WAL into a fresh store, constructs a plane
+        around it (the new watch cursor re-seeds every dirty queue from
+        the recovered objects), then runs :meth:`adopt` so in-flight
+        workloads keep their allocations. With ``resume_journal`` the
+        recovered plane immediately compacts into a new snapshot and
+        keeps journaling to the same directory.
+        """
+        from .persistence import recover_store
+        store, info = recover_store(state_dir)
+        plane = cls(registry, cluster, store=store, runtime=runtime,
+                    reconcile_mode=reconcile_mode, admission=admission)
+        plane.recovery_info = info
+        plane.adopt()
+        if resume_journal:
+            plane.attach_journal(state_dir, **journal_kw)
+        return plane
+
+    def adopt(self) -> Dict[str, int]:
+        """Adopt persisted state against live driver inventory.
+
+        Runs discovery, then re-derives the :class:`ResourcePool`'s
+        allocation bookkeeping from persisted claim allocations (so the
+        AllocationController sees them as healthy and never re-allocates),
+        re-primes node drivers for claims recorded as prepared
+        (NodePrepareResources is node-local state a restart loses), and
+        strips :class:`~repro.api.persistence.Unpersisted` output markers
+        so derived artifacts (plan, mesh) are rebuilt by the
+        AttachmentController — deterministically, from the same seed.
+        """
+        from .persistence import Unpersisted
+        self.registry.run_discovery()
+        self.sync_inventory()
+        stats = {"adopted": 0, "lost": 0, "prepared": 0, "rederive": 0}
+        pool = self.registry.pool
+        for obj in self.store.list_objects("ResourceClaim"):
+            claim: ResourceClaim = obj.spec
+            self.queue.add("ResourceClaim", obj.meta.name)
+            if not claim.allocated:
+                continue
+            devs = [pool.get(a.ref.id) for a in claim.allocation.devices]
+            if (all(d is not None for d in devs)
+                    and not any(pool.is_allocated(d.id) for d in devs)):
+                pool.mark_allocated(devs, claim.uid)
+                stats["adopted"] += 1
+                if claim.prepared:
+                    # refill the node drivers' prepared-config caches;
+                    # touches no store state, so no condition churn
+                    self.registry.prepare(claim)
+                    stats["prepared"] += 1
+            else:
+                # devices vanished while we were down — leave the stale
+                # allocation for the AllocationController to heal
+                stats["lost"] += 1
+        for obj in self.store.list_objects("Workload"):
+            self.queue.add("Workload", obj.meta.name)
+            outputs = obj.status.outputs
+            dropped = [k for k, v in outputs.items()
+                       if isinstance(v, Unpersisted)]
+            if dropped:
+                for k in dropped:
+                    outputs.pop(k)
+                # the fingerprint guards a plan/mesh we no longer have;
+                # removing it makes the AttachmentController re-derive
+                outputs.pop("attachment_fingerprint", None)
+                stats["rederive"] += 1
+        self.adoption_stats = stats
+        return stats
 
     # -- inventory ---------------------------------------------------------
     def run_discovery(self) -> int:
@@ -447,6 +631,11 @@ class ControlPlane:
                 self.queue.add("ResourceClaim", obj.meta.name)
             elif not obj.is_true(CONDITION_ALLOCATED, current=True):
                 self.queue.add("ResourceClaim", obj.meta.name)
+        # template workloads blocked at admission (no claims exist yet to
+        # wake them) retry when new capacity is published
+        for obj in self.store.list_objects("Workload"):
+            if not obj.is_true(CONDITION_READY, current=True):
+                self.queue.add("Workload", obj.meta.name)
 
     def _route_event(self, e: WatchEvent,
                      slice_nodes: Optional[Set[str]] = None) -> None:
@@ -590,9 +779,17 @@ class ControlPlane:
         mode = mode or self.reconcile_mode
         if mode not in ("event", "sweep"):
             raise ValueError(f"unknown reconcile mode {mode!r}")
-        if mode == "sweep":
-            return self._reconcile_sweep(max_rounds)
-        return self._reconcile_events(max_rounds)
+        try:
+            if mode == "sweep":
+                return self._reconcile_sweep(max_rounds)
+            return self._reconcile_events(max_rounds)
+        finally:
+            # batched durability: the journal flushes once a worthwhile
+            # window has accumulated (also on the error path, so a crash
+            # report reflects journaled reality); journal.sync() is the
+            # hard barrier for callers that need one
+            if self.journal is not None:
+                self.journal.maybe_flush()
 
     def _reconcile_events(self, max_rounds: int) -> int:
         for round_no in range(1, max_rounds + 1):
@@ -692,6 +889,10 @@ class ControlPlane:
             raise RuntimeError(
                 f"{kind}/{name} did not reach {condition}=True: "
                 f"{obj.conditions_summary()}")
+        if self.journal is not None:
+            # convergence the caller observed is convergence that must
+            # survive a crash — drain the window regardless of batch size
+            self.journal.flush()
         return obj
 
     # -- claim teardown helpers (controller internals) ---------------------

@@ -21,11 +21,22 @@ Semantics (deliberately Kubernetes-shaped):
 * **idempotent conditions**: ``set_condition`` is a no-op (no version
   bump, no watch event) when the condition state is unchanged — this is
   what lets reconcile loops detect a fixpoint.
+* **thread-safe**: every mutation and every watch-cursor read runs under
+  one re-entrant lock, so threaded informers can share a store with the
+  reconcile loop (the ROADMAP's informer prerequisite).
+* **journal hooks**: ``add_journal`` registers a callback invoked (under
+  the lock) for every appended watch event — the write-ahead-log tap
+  used by :mod:`repro.api.persistence`.
+* **admission validators**: ``add_validator`` callbacks run before a
+  ``create`` lands; the control plane uses this to reject claims that
+  exceed a DeviceClass capacity summary (:class:`AdmissionError`) at
+  submit time instead of failing allocation later.
 """
 
 from __future__ import annotations
 
 import itertools
+import threading
 from bisect import bisect_right
 from dataclasses import dataclass, replace
 from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
@@ -37,7 +48,7 @@ from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus, TRUE,
                       Workload)
 
 __all__ = ["ApiStore", "Watch", "WatchEvent", "ConflictError",
-           "ApiError", "KIND_OF"]
+           "ApiError", "AdmissionError", "KIND_OF"]
 
 # The typed registry: payload type -> kind string. This is the "schema"
 # of the API — create() rejects anything else.
@@ -52,6 +63,15 @@ KIND_OF: Dict[Type[Any], str] = {
 
 class ApiError(KeyError):
     """Unknown object / kind."""
+
+
+class AdmissionError(ApiError):
+    """An admission validator rejected the object at create time."""
+
+    def __str__(self) -> str:
+        # KeyError.__str__ reprs its argument, which would quote-wrap
+        # every surfaced admission message
+        return str(self.args[0]) if self.args else ""
 
 
 class ConflictError(RuntimeError):
@@ -84,19 +104,22 @@ class Watch:
                  since_version: int):
         self._store = store
         self._kind = kind
-        self._pos = store._log_index_after(since_version)
+        with store.lock:
+            self._pos = store._log_index_after(since_version)
 
     def poll(self) -> List[WatchEvent]:
-        log = self._store._log
-        events = [e for e in log[self._pos:]
-                  if self._kind is None or e.kind == self._kind]
-        self._pos = len(log)
-        return events
+        with self._store.lock:
+            log = self._store._log
+            events = [e for e in log[self._pos:]
+                      if self._kind is None or e.kind == self._kind]
+            self._pos = len(log)
+            return events
 
     @property
     def pending(self) -> bool:
-        return any(self._kind is None or e.kind == self._kind
-                   for e in self._store._log[self._pos:])
+        with self._store.lock:
+            return any(self._kind is None or e.kind == self._kind
+                       for e in self._store._log[self._pos:])
 
 
 class ApiStore:
@@ -106,13 +129,40 @@ class ApiStore:
         self._objects: Dict[Tuple[str, str], ApiObject] = {}
         self._by_kind: Dict[str, Dict[str, ApiObject]] = {}
         self._version = itertools.count(1)
+        self._last_version = 0
         self._log: List[WatchEvent] = []
+        # one re-entrant lock guards objects, the log, and the version
+        # counter; journal hooks run under it so WAL order == event order
+        self._lock = threading.RLock()
+        self._journals: List[Callable[[WatchEvent], None]] = []
+        self._validators: List[Callable[[str, Any], None]] = []
+
+    # -- concurrency / hooks ----------------------------------------------
+    @property
+    def lock(self) -> threading.RLock:
+        return self._lock
+
+    def add_journal(self, hook: Callable[[WatchEvent], None]) -> None:
+        """Register a per-event callback (the persistence WAL tap)."""
+        self._journals.append(hook)
+
+    def remove_journal(self, hook: Callable[[WatchEvent], None]) -> None:
+        if hook in self._journals:
+            self._journals.remove(hook)
+
+    def add_validator(self, validator: Callable[[str, Any], None]) -> None:
+        """Register an admission validator run before each ``create``."""
+        self._validators.append(validator)
 
     # -- internals ---------------------------------------------------------
     def _bump(self, obj: ApiObject, event_type: str) -> ApiObject:
         obj.meta.resource_version = next(self._version)
-        self._log.append(WatchEvent(event_type, obj.meta.kind, obj.meta.name,
-                                    obj.meta.resource_version, obj))
+        self._last_version = obj.meta.resource_version
+        event = WatchEvent(event_type, obj.meta.kind, obj.meta.name,
+                           obj.meta.resource_version, obj)
+        self._log.append(event)
+        for hook in self._journals:
+            hook(event)
         return obj
 
     def _log_index_after(self, version: int) -> int:
@@ -143,15 +193,18 @@ class ApiStore:
         name = name or getattr(spec, "name", None)
         if not name:
             raise ApiError(f"{kind} object needs a name")
-        key = (kind, name)
-        if key in self._objects:
-            raise ConflictError(f"{kind}/{name} already exists")
-        obj = ApiObject(meta=ObjectMeta(name=name, kind=kind,
-                                        labels=dict(labels or {})),
-                        spec=spec)
-        self._objects[key] = obj
-        self._by_kind.setdefault(kind, {})[name] = obj
-        return self._bump(obj, ADDED)
+        with self._lock:
+            for validate in self._validators:
+                validate(kind, spec)
+            key = (kind, name)
+            if key in self._objects:
+                raise ConflictError(f"{kind}/{name} already exists")
+            obj = ApiObject(meta=ObjectMeta(name=name, kind=kind,
+                                            labels=dict(labels or {})),
+                            spec=spec)
+            self._objects[key] = obj
+            self._by_kind.setdefault(kind, {})[name] = obj
+            return self._bump(obj, ADDED)
 
     def get(self, kind: str, name: str) -> ApiObject:
         try:
@@ -165,11 +218,12 @@ class ApiStore:
     def list_objects(self, kind: Optional[str] = None,
                      selector: Optional[Mapping[str, str]] = None
                      ) -> List[ApiObject]:
-        if kind is not None:
-            # per-kind index: avoids touching unrelated kinds entirely
-            pool = [(n, o) for n, o in self._by_kind.get(kind, {}).items()]
-        else:
-            pool = [((k, n), o) for (k, n), o in self._objects.items()]
+        with self._lock:
+            if kind is not None:
+                # per-kind index: avoids touching unrelated kinds entirely
+                pool = [(n, o) for n, o in self._by_kind.get(kind, {}).items()]
+            else:
+                pool = [((k, n), o) for (k, n), o in self._objects.items()]
         out = []
         for _, obj in sorted(pool, key=lambda t: t[0]):
             if selector and any(obj.meta.labels.get(lk) != lv
@@ -183,11 +237,12 @@ class ApiStore:
 
     def delete(self, kind: str, name: str,
                resource_version: Optional[int] = None) -> ApiObject:
-        obj = self.get(kind, name)
-        self._check_version(obj, resource_version)
-        del self._objects[(kind, name)]
-        self._by_kind.get(kind, {}).pop(name, None)
-        return self._bump(obj, DELETED)
+        with self._lock:
+            obj = self.get(kind, name)
+            self._check_version(obj, resource_version)
+            del self._objects[(kind, name)]
+            self._by_kind.get(kind, {}).pop(name, None)
+            return self._bump(obj, DELETED)
 
     # -- spec writes (bump generation) -------------------------------------
     def update_spec(self, kind: str, name: str,
@@ -198,39 +253,44 @@ class ApiStore:
         ``mutate`` may modify the payload in place (return None) or
         return a replacement payload of the same registered type.
         """
-        obj = self.get(kind, name)
-        self._check_version(obj, resource_version)
-        new_spec = mutate(obj.spec)
-        if new_spec is not None:
-            if self.kind_of(new_spec) != kind:
-                raise ApiError(f"replacement spec for {kind}/{name} has "
-                               f"kind {self.kind_of(new_spec)}")
-            obj.spec = new_spec
-        obj.meta.generation += 1
-        return self._bump(obj, MODIFIED)
+        with self._lock:
+            obj = self.get(kind, name)
+            self._check_version(obj, resource_version)
+            new_spec = mutate(obj.spec)
+            if new_spec is not None:
+                if self.kind_of(new_spec) != kind:
+                    raise ApiError(f"replacement spec for {kind}/{name} has "
+                                   f"kind {self.kind_of(new_spec)}")
+                obj.spec = new_spec
+            obj.meta.generation += 1
+            return self._bump(obj, MODIFIED)
 
     # -- status writes (resource version only) -----------------------------
     def update_status(self, kind: str, name: str,
                       mutate: Callable[[ObjectStatus], None]) -> ApiObject:
-        obj = self.get(kind, name)
-        mutate(obj.status)
-        return self._bump(obj, MODIFIED)
+        with self._lock:
+            obj = self.get(kind, name)
+            mutate(obj.status)
+            return self._bump(obj, MODIFIED)
 
     def set_condition(self, kind: str, name: str, cond: Condition) -> bool:
         """Idempotent condition write. Returns True iff state changed."""
-        obj = self.get(kind, name)
-        existing = obj.status.condition(cond.type)
-        if existing is not None:
-            if existing.same_state(cond):
-                return False
-            if existing.status == cond.status:
-                # same status, new reason/generation: keep old timestamp
-                cond = replace(cond, last_transition=existing.last_transition)
-            obj.status.conditions[obj.status.conditions.index(existing)] = cond
-        else:
-            obj.status.conditions.append(cond)
-        self._bump(obj, MODIFIED)
-        return True
+        with self._lock:
+            obj = self.get(kind, name)
+            existing = obj.status.condition(cond.type)
+            if existing is not None:
+                if existing.same_state(cond):
+                    return False
+                if existing.status == cond.status:
+                    # same status, new reason/generation: keep old timestamp
+                    cond = replace(cond,
+                                   last_transition=existing.last_transition)
+                obj.status.conditions[
+                    obj.status.conditions.index(existing)] = cond
+            else:
+                obj.status.conditions.append(cond)
+            self._bump(obj, MODIFIED)
+            return True
 
     def set_output(self, kind: str, name: str, key: str, value: Any) -> None:
         self.update_status(kind, name,
@@ -244,7 +304,10 @@ class ApiStore:
     # -- introspection -----------------------------------------------------
     @property
     def resource_version(self) -> int:
-        return self._log[-1].resource_version if self._log else 0
+        # tracked explicitly (not read off the log tail) so a recovered
+        # store whose last durable event was a DELETE keeps counting from
+        # the right place
+        return self._last_version
 
     def __len__(self) -> int:
         return len(self._objects)

@@ -3,6 +3,7 @@
 Layout (one directory per step):
   step_000100/
     manifest.json        # tree structure, shapes, dtypes, shard map
+    store.json           # optional: control-plane ApiStore dump
     shard_00000.msgpack.zst   # one file per host in a real deployment
     _COMMITTED           # written last: crash-safe commit marker
 
@@ -11,6 +12,12 @@ restart path): a checkpoint is readable iff _COMMITTED exists; partial
 writes from a dying trainer are ignored by restore. The CheckpointManager
 rotates old steps, supports async (background-thread) saves, and resume
 picks the newest committed step.
+
+Network-state co-checkpointing: when a ``store_provider`` (or an explicit
+``store_dump``) is wired in, each step also lands a deterministic dump of
+the declarative control plane's ApiStore (claims, allocations, workload
+conditions) referenced from the manifest — so a restarted trainer adopts
+both model *and* network state (see docs/RECOVERY.md).
 """
 
 from __future__ import annotations
@@ -22,7 +29,7 @@ import shutil
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,8 +79,14 @@ def _flatten_with_paths(tree: Any) -> List[Tuple[str, Any]]:
 
 
 def save_checkpoint(directory: str, step: int, tree: Any,
-                    compress_level: int = 3) -> str:
-    """Write one committed checkpoint; returns its path."""
+                    compress_level: int = 3,
+                    store_dump: Optional[Dict[str, Any]] = None) -> str:
+    """Write one committed checkpoint; returns its path.
+
+    ``store_dump`` (a :func:`repro.api.persistence.dump_store` dict)
+    lands as ``store.json`` and is referenced from the manifest, making
+    the control plane's object state part of the atomic commit.
+    """
     path = os.path.join(directory, f"step_{step:08d}")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -92,6 +105,13 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     blob = msgpack.packb(payload, use_bin_type=True)
     with open(os.path.join(tmp, "shard_00000.msgpack.zst"), "wb") as f:
         f.write(_compress(blob, DEFAULT_CODEC, compress_level))
+    if store_dump is not None:
+        with open(os.path.join(tmp, "store.json"), "w") as f:
+            json.dump(store_dump, f, sort_keys=True, separators=(",", ":"))
+        manifest["store"] = {
+            "file": "store.json",
+            "resource_version": store_dump.get("resource_version", 0),
+            "objects": len(store_dump.get("objects", ()))}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
@@ -112,6 +132,30 @@ def list_checkpoints(directory: str) -> List[int]:
                 and os.path.exists(os.path.join(full, COMMIT_MARKER))):
             steps.append(int(name.split("_")[1]))
     return sorted(steps)
+
+
+def load_store_dump(directory: str,
+                    step: Optional[int] = None) -> Optional[Dict[str, Any]]:
+    """The ApiStore dump co-checkpointed at ``step`` (newest if None).
+
+    Returns None when the checkpoint carries no network state — callers
+    fall back to a fresh control plane.
+    """
+    steps = list_checkpoints(directory)
+    if not steps:
+        return None
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        entry = manifest.get("store")
+        if not entry:
+            return None
+        with open(os.path.join(path, entry["file"])) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
 
 
 def restore_checkpoint(directory: str, tree_like: Any,
@@ -143,11 +187,18 @@ def restore_checkpoint(directory: str, tree_like: Any,
 
 @dataclass
 class CheckpointManager:
-    """Rotation + async save + resume, driven by trainer NRI hooks."""
+    """Rotation + async save + resume, driven by trainer NRI hooks.
+
+    ``store_provider`` (e.g. ``lambda: dump_store(plane.store)``) is
+    sampled synchronously at each ``save`` so the network state in the
+    checkpoint is consistent with the step being written, even when the
+    file write itself is async.
+    """
 
     directory: str
     keep: int = 3
     async_save: bool = True
+    store_provider: Optional[Callable[[], Dict[str, Any]]] = None
     _thread: Optional[threading.Thread] = field(default=None, repr=False)
     _error: Optional[BaseException] = field(default=None, repr=False)
 
@@ -155,17 +206,21 @@ class CheckpointManager:
         self.wait()
         # snapshot to host BEFORE returning (async writes the files only)
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        store_dump = (self.store_provider()
+                      if self.store_provider is not None else None)
         if self.async_save:
             def work():
                 try:
-                    save_checkpoint(self.directory, step, host_tree)
+                    save_checkpoint(self.directory, step, host_tree,
+                                    store_dump=store_dump)
                     self._rotate()
                 except BaseException as e:  # noqa: BLE001
                     self._error = e
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
         else:
-            save_checkpoint(self.directory, step, host_tree)
+            save_checkpoint(self.directory, step, host_tree,
+                            store_dump=store_dump)
             self._rotate()
 
     def wait(self) -> None:

@@ -45,6 +45,17 @@ class DeviceClass:
     def __post_init__(self) -> None:
         self._compiled = [compile_expr(s) for s in self.selectors]
 
+    def __getstate__(self) -> Dict[str, Any]:
+        # compiled CEL programs are derived state: dropping them keeps
+        # WAL pickles small/fast; compile_expr is LRU-cached on load
+        state = self.__dict__.copy()
+        state.pop("_compiled", None)
+        return state
+
+    def __setstate__(self, state: Dict[str, Any]) -> None:
+        self.__dict__.update(state)
+        self._compiled = [compile_expr(s) for s in self.selectors]
+
     def matches(self, device: Device) -> bool:
         env = {"device": device.cel_env()}
         try:
@@ -81,6 +92,15 @@ class DeviceRequest:
         # matching device), so only ExactCount validates it
         if self.allocation_mode == "ExactCount" and self.count < 1:
             raise ValueError("count must be >= 1")
+        self._compiled = [compile_expr(s) for s in self.selectors]
+
+    def __getstate__(self) -> Dict[str, Any]:
+        state = self.__dict__.copy()
+        state.pop("_compiled", None)        # derived; recompiled on load
+        return state
+
+    def __setstate__(self, state: Dict[str, Any]) -> None:
+        self.__dict__.update(state)
         self._compiled = [compile_expr(s) for s in self.selectors]
 
     def selector_match(self, device: Device) -> bool:

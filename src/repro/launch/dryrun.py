@@ -36,7 +36,7 @@ from ..roofline.hlo import collective_bytes_by_kind
 from ..train.optimizer import Adafactor, AdamW
 from ..train.schedule import cosine_schedule
 from ..train.train_step import StepConfig, make_train_step, train_state_specs
-from .mesh import make_production_mesh
+from .mesh import make_planned_mesh
 
 BIG_MODEL_PARAMS = 60e9   # adafactor above this (HBM), adamw below
 
@@ -242,7 +242,9 @@ def lower_cell(arch: str, shape_name: str, mesh=None, multi_pod: bool = False,
                 "reason": why}
 
     if mesh is None:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+        # the KND path: claim + workload through the control plane (no
+        # hand-wired jax.make_mesh in launch drivers)
+        mesh, _plan = make_planned_mesh(multi_pod=multi_pod)
     rules = ShardingRules(mesh=mesh)
     if arch in ARCH_RULES:
         rules = rules.updated(ARCH_RULES[arch])
@@ -285,7 +287,7 @@ def lower_cell(arch: str, shape_name: str, mesh=None, multi_pod: bool = False,
 
 def run_all(out_dir: str, multi_pod: bool, archs=None, shapes=None) -> int:
     os.makedirs(out_dir, exist_ok=True)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh, _plan = make_planned_mesh(multi_pod=multi_pod)
     mesh_tag = "2x16x16" if multi_pod else "16x16"
     failures = 0
     for arch in (archs or ARCHS):

@@ -55,14 +55,19 @@ class ElasticController:
     registry: core.DriverRegistry
     model_axis: int = 4
     placement: str = "aligned"
+    # WAL-backed persistence: an existing state dir is recovered (the
+    # claim + workload are adopted, not re-allocated); a fresh one is
+    # journaled so the *next* controller restart can adopt in turn.
+    state_dir: Optional[str] = None
     events: List[str] = field(default_factory=list)
 
     CLAIM = "elastic-train"
     WORKLOAD = "elastic-train-job"
 
     def __post_init__(self) -> None:
-        self.plane = ControlPlane(self.registry, self.cluster)
-        self.plane.sync_inventory()
+        self.plane = ControlPlane.open(self.state_dir, self.registry,
+                                       self.cluster,
+                                       announce=self.events.append)
         self.registry.bus.subscribe(Events.NODE_FAILED, self.on_node_failed,
                                     "elastic-controller")
         self.registry.bus.subscribe(Events.STRAGGLER_DETECTED,

@@ -13,11 +13,9 @@ import json
 import sys
 from typing import Any, Dict, Optional
 
-import jax
-
 from ..train.train_step import StepConfig
 from .dryrun import lower_cell
-from .mesh import make_production_mesh
+from .mesh import planned_mesh_for
 
 # iteration catalog: name -> spec
 ITERS: Dict[str, Dict[str, Any]] = {
@@ -148,9 +146,9 @@ def run_iter(name: str, out_dir: str = "experiments/hillclimb") -> Dict[str, Any
     os.makedirs(out_dir, exist_ok=True)
     mesh = None
     if "mesh_shape" in spec:
-        mesh = jax.make_mesh(
-            spec["mesh_shape"], spec["mesh_axes"],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(spec["mesh_shape"]))
+        # custom meshes (e.g. grok's expert mesh) also come from the
+        # control plane: claim + workload, not a hand-wired jax.make_mesh
+        mesh, _plan = planned_mesh_for(spec["mesh_shape"], spec["mesh_axes"])
     step_cfg = None
     if "step" in spec:
         base = dict(microbatches=8, remat="full", attention_impl="auto")

@@ -18,8 +18,15 @@ import math
 import time
 
 
-def provision_replicas(slots: int, chips_per_replica: int):
-    """Declarative serve replica set -> (plane, workload ApiObject)."""
+def provision_replicas(slots: int, chips_per_replica: int,
+                       state_dir: str = None):
+    """Declarative serve replica set -> (plane, workload ApiObject).
+
+    With ``state_dir``, an existing WAL is recovered first: the stamped
+    replica claims are adopted with their allocations intact and the
+    workload only converges on a *delta* (e.g. a changed ``slots``) —
+    the restart-safe serving story of the durable control plane.
+    """
     from .. import core
     from ..api import ControlPlane, Workload
     from ..topology.tpu import TpuPodSpec, build_tpu_cluster
@@ -29,19 +36,25 @@ def provision_replicas(slots: int, chips_per_replica: int):
     cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
     reg = core.DriverRegistry()
     reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-    plane = ControlPlane(reg, cluster)
-    plane.run_discovery()
+    plane = ControlPlane.open(state_dir, reg, cluster)
 
-    plane.submit(core.ResourceClaimTemplate(
-        name="serve-replica",
-        spec=core.ClaimSpec(
-            requests=[core.DeviceRequest(
-                name="chips", device_class="tpu.google.com",
-                count=chips_per_replica)],
-            topology_scope="cluster")))
-    plane.submit(Workload(claim_template="serve-replica", role="serve",
-                          replicas=slots),
-                 name="serve")
+    if plane.store.try_get("ResourceClaimTemplate", "serve-replica") is None:
+        plane.submit(core.ResourceClaimTemplate(
+            name="serve-replica",
+            spec=core.ClaimSpec(
+                requests=[core.DeviceRequest(
+                    name="chips", device_class="tpu.google.com",
+                    count=chips_per_replica)],
+                topology_scope="cluster")))
+    wl_obj = plane.store.try_get("Workload", "serve")
+    if wl_obj is None:
+        plane.submit(Workload(claim_template="serve-replica", role="serve",
+                              replicas=slots),
+                     name="serve")
+    elif wl_obj.spec.replicas != slots:
+        # resize of a recovered replica set is a spec edit, as ever
+        plane.edit("Workload", "serve",
+                   lambda w: setattr(w, "replicas", slots))
     wl = plane.wait_for("Workload", "serve")
     return plane, wl
 
@@ -60,11 +73,15 @@ def main() -> None:
     ap.add_argument("--claim-chips", type=int, default=0,
                     help="chips per replica slot; >0 provisions the "
                          "replica set through the declarative control plane")
+    ap.add_argument("--state-dir", default=None,
+                    help="control-plane state directory; recovered replica "
+                         "claims are adopted instead of re-stamped")
     args = ap.parse_args()
 
     knd = None
     if args.claim_chips > 0:
-        plane, wl = provision_replicas(args.slots, args.claim_chips)
+        plane, wl = provision_replicas(args.slots, args.claim_chips,
+                                       state_dir=args.state_dir)
         lat = wl.status.outputs["phase_latency_s"]
         claims = wl.status.outputs["claims"]
         print(f"[knd] serve replica set Ready: {len(claims)} claims "

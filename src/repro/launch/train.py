@@ -32,6 +32,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--state-dir", default=None,
+                    help="control-plane state directory (WAL + snapshots); "
+                         "an existing one is recovered and its in-flight "
+                         "workload adopted instead of re-allocated")
     ap.add_argument("--devices", type=int, default=0,
                     help="host-platform device count (0 = real devices)")
     ap.add_argument("--mesh", default=None,
@@ -64,9 +68,10 @@ def main() -> None:
 
     rules = None
     plan = None
+    plane = None
     if args.mesh:
         from .. import core
-        from ..api import ControlPlane, Workload
+        from ..api import ControlPlane, Workload, has_state, load_store
         from ..topology.tpu import TpuPodSpec, build_tpu_cluster
         d, m = (int(x) for x in args.mesh.split("x"))
         # declarative KND workflow on a pod big enough for the grid:
@@ -75,14 +80,42 @@ def main() -> None:
         cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
         reg = core.DriverRegistry()
         reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
-        plane = ControlPlane(reg, cluster)
-        plane.run_discovery()
-        plane.submit(plane.planner.make_claim("train", d * m))
-        plane.submit(Workload(claim="train", placement=args.placement,
-                              axes=[core.AxisSpec("data", d, "y"),
-                                    core.AxisSpec("model", m, "x")],
-                              seed=args.seed),
-                     name="train-job")
+        from ..ckpt.checkpoint import load_store_dump
+        dump = (load_store_dump(args.ckpt_dir)
+                if args.resume and args.ckpt_dir
+                and not (args.state_dir and has_state(args.state_dir))
+                else None)
+        if dump is not None:
+            # no WAL, but the checkpoint carries the network state
+            plane = ControlPlane(reg, cluster, store=load_store(dump),
+                                 state_dir=args.state_dir)
+            print(f"[knd] adopted checkpointed store "
+                  f"v{dump['resource_version']}: {plane.adopt()}")
+        else:
+            # kill-and-resume: an existing state dir is recovered and
+            # its in-flight workload adopted
+            plane = ControlPlane.open(args.state_dir, reg, cluster)
+        # declarative spec reconciliation: a recovered run with changed
+        # CLI flags converges onto the new intent as spec edits instead
+        # of silently keeping the adopted mesh
+        claim_obj = plane.store.try_get("ResourceClaim", "train")
+        if claim_obj is None:
+            plane.submit(plane.planner.make_claim("train", d * m))
+        elif claim_obj.spec.spec.requests[0].count != d * m:
+            plane.edit("ResourceClaim", "train",
+                       lambda c: setattr(c.spec.requests[0], "count", d * m))
+        axes = [core.AxisSpec("data", d, "y"), core.AxisSpec("model", m, "x")]
+        wl_obj = plane.store.try_get("Workload", "train-job")
+        if wl_obj is None:
+            plane.submit(Workload(claim="train", placement=args.placement,
+                                  axes=axes, seed=args.seed),
+                         name="train-job")
+        elif (list(wl_obj.spec.axes) != axes
+              or wl_obj.spec.placement != args.placement
+              or wl_obj.spec.seed != args.seed):
+            def retarget(w):
+                w.axes, w.placement, w.seed = axes, args.placement, args.seed
+            plane.edit("Workload", "train-job", retarget)
         wl = plane.wait_for("Workload", "train-job")
         plan = wl.status.outputs["plan"]
         mesh = wl.status.outputs["mesh"]
@@ -92,6 +125,10 @@ def main() -> None:
               f"(submit->Ready {lat['total'] * 1e3:.1f}ms)")
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt is not None and plane is not None:
+        # co-checkpoint the network state next to the model state
+        from ..api import dump_store
+        ckpt.store_provider = lambda: dump_store(plane.store)
     trainer = Trainer(cfg, opt, data, step_cfg=sc, ckpt=ckpt,
                       ckpt_every=args.ckpt_every)
 

@@ -150,15 +150,25 @@ class TestReconcile:
         assert cobj.spec.allocated and cobj.spec.prepared
 
     def test_unsatisfiable_claim_reports_condition(self):
+        # count > capacity is now rejected at admission (see
+        # test_persistence.TestAdmission), so runtime unsatisfiability is
+        # exercised via a selector no device matches
         plane = make_plane()          # 16 chips
-        plane.submit(chip_claim("big", 64))
+        claim = chip_claim("picky", 8)
+        claim.spec.requests[0].selectors.append(
+            'device.attributes["generation"] == "v9"')
+        claim.spec.requests[0].__post_init__()      # recompile selectors
+        plane.submit(claim)
         plane.reconcile()
-        cobj = plane.store.get("ResourceClaim", "big")
+        cobj = plane.store.get("ResourceClaim", "picky")
         cond = cobj.condition(CONDITION_ALLOCATED)
         assert cond.status == FALSE and cond.reason == "Unsatisfiable"
         # heal by editing the spec down to what the pool has
-        plane.edit("ResourceClaim", "big",
-                   lambda c: setattr(c.spec.requests[0], "count", 8))
+        plane.edit("ResourceClaim", "picky",
+                   lambda c: c.spec.requests.__setitem__(
+                       0, DeviceRequest(name="chips",
+                                        device_class="tpu.google.com",
+                                        count=8)))
         plane.reconcile()
         assert cobj.is_true(CONDITION_ALLOCATED, current=True)
 

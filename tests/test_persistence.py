@@ -1,0 +1,542 @@
+"""Durable control plane: WAL persistence, crash recovery, adoption.
+
+Covers the ISSUE-3 acceptance surface:
+
+* codec round-trips + whole-store dump determinism;
+* WAL replay determinism over randomized event sequences;
+* crash-point fuzz — truncating the WAL at *every byte* of the last
+  frame either drops that frame or replays it, never corrupts;
+* snapshot-compaction equivalence;
+* recovery + adoption: byte-identical allocations, zero re-allocations
+  (verified via condition-transition history), driver re-priming,
+  template-counter continuity;
+* thread-safe ApiStore (the ROADMAP informer prerequisite);
+* admission validation at claim create time.
+"""
+
+import itertools
+import os
+import random
+import threading
+
+import pytest
+
+from repro.api import (AdmissionError, ApiStore, Condition, ControlPlane,
+                       Workload, CONDITION_ALLOCATED, CONDITION_ATTACHED,
+                       CONDITION_PREPARED, CONDITION_READY, TRUE,
+                       allocation_records, has_state, recover_store,
+                       store_dump_json)
+from repro.api.persistence import (StoreJournal, Unpersisted, WriteAheadLog,
+                                   decode, dump_api_object, dump_store,
+                                   encode, load_api_object, load_store)
+from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, DriverRegistry,
+                        IciDriver, MatchAttribute, ResourceClaim,
+                        ResourceClaimTemplate, TpuDriver)
+from repro.core.claims import DeviceConfig
+from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+
+
+def make_plane(side=4, **kwargs):
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster, **kwargs)
+    plane.run_discovery()
+    return plane
+
+
+def chip_claim(name, count, selectors=()):
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
+                                selectors=list(selectors), count=count)],
+        topology_scope="cluster"))
+
+
+# ---------------------------------------------------------------------------
+# Codec
+# ---------------------------------------------------------------------------
+
+class TestCodec:
+    def test_claim_round_trip(self):
+        claim = chip_claim("c", 2, ['device.attributes["x"] >= 0'])
+        claim.spec.constraints.append(
+            MatchAttribute(attribute="tpu.google.com/host"))
+        claim.spec.config.append(
+            DeviceConfig(driver="d", parameters={"mtu": 9000}))
+        out = decode(encode(claim))
+        assert out.name == claim.name and out.uid == claim.uid
+        assert out.spec.requests[0].selectors == \
+            claim.spec.requests[0].selectors
+        assert out.spec.constraints[0].attribute == "tpu.google.com/host"
+        # compiled selectors were rebuilt, not lost
+        assert out.spec.requests[0]._compiled
+
+    def test_template_counter_continuity(self):
+        tmpl = ResourceClaimTemplate(name="t", spec=ClaimSpec(
+            requests=[DeviceRequest(name="r", device_class="c")]))
+        tmpl.instantiate(owner="w")
+        tmpl.instantiate(owner="w")
+        out = decode(encode(tmpl))
+        # the next stamped claim must not collide with the first two
+        assert out.instantiate(owner="w").name == "t-w-2"
+
+    def test_tuples_and_nested_dicts_survive(self):
+        v = {"fp": (3, 1, ("a/b", "c/d")), "lat": {"total": 0.25}}
+        assert decode(encode(v)) == v
+        assert isinstance(decode(encode(v))["fp"], tuple)
+
+    def test_unencodable_output_becomes_marker(self):
+        obj = load_api_object(dump_api_object(_obj_with_mesh_output()))
+        assert obj.status.outputs["mesh"] == Unpersisted("object")
+        # markers re-encode stably (re-journaling a recovered store)
+        assert encode(obj.status.outputs["mesh"], lenient=True) == \
+            {"!": "unpersisted", "type": "object"}
+
+    def test_store_dump_round_trip_is_byte_identical(self):
+        plane = make_plane()
+        plane.submit(chip_claim("a", 2))
+        plane.submit(Workload(claim="a", build_mesh=False), name="job")
+        plane.reconcile()
+        dump = store_dump_json(plane.store)
+        assert store_dump_json(load_store(dump_store(plane.store))) == dump
+
+
+def _obj_with_mesh_output():
+    store = ApiStore()
+    obj = store.create(chip_claim("m", 1))
+    store.set_output("ResourceClaim", "m", "mesh", object())
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead log
+# ---------------------------------------------------------------------------
+
+class TestWal:
+    def _wal_with_records(self, path, n=4):
+        wal = WriteAheadLog(path)
+        for i in range(n):
+            wal.append({"v": i + 1, "t": "ADDED", "k": "K", "n": f"o{i}",
+                        "o": {"payload": i}})
+        wal.close()
+        return wal
+
+    def test_append_replay(self, tmp_path):
+        path = str(tmp_path / "wal.log")
+        self._wal_with_records(path)
+        recs = list(WriteAheadLog.replay(path))
+        assert [r["v"] for r in recs] == [1, 2, 3, 4]
+
+    def test_torn_tail_dropped_at_every_byte(self, tmp_path):
+        """Crash-point fuzz: cut the last frame at every byte boundary."""
+        path = str(tmp_path / "wal.log")
+        self._wal_with_records(path)
+        data = open(path, "rb").read()
+        # locate the last frame start by replaying prefix lengths
+        frames = []
+        pos = 0
+        while pos < len(data):
+            length = int(data[pos + 9:pos + 17], 16)
+            frames.append(pos)
+            pos += 19 + length
+        last = frames[-1]
+        cut_path = str(tmp_path / "cut.log")
+        for cut in range(last, len(data)):
+            with open(cut_path, "wb") as f:
+                f.write(data[:cut])
+            recs = list(WriteAheadLog.replay(cut_path))
+            # all-or-nothing: the torn frame is dropped, never corrupted
+            assert [r["v"] for r in recs] == [1, 2, 3]
+        # and the full file replays everything
+        assert len(list(WriteAheadLog.replay(path))) == 4
+
+    def test_corrupt_crc_ends_replay(self, tmp_path):
+        path = str(tmp_path / "wal.log")
+        self._wal_with_records(path)
+        data = bytearray(open(path, "rb").read())
+        data[len(data) - 3] ^= 0xFF       # flip a byte inside the last frame
+        open(path, "wb").write(bytes(data))
+        assert [r["v"] for r in WriteAheadLog.replay(path)] == [1, 2, 3]
+
+    def test_pickled_batches_replay(self, tmp_path):
+        path = str(tmp_path / "wal.log")
+        wal = WriteAheadLog(path)
+        store = ApiStore()
+        obj = store.create(chip_claim("c", 1))
+        wal.append_batch([(obj.meta.resource_version, "ADDED",
+                           "ResourceClaim", "c", obj),
+                          (7, "DELETED", "ResourceClaim", "gone", None)])
+        wal.close()
+        recs = list(WriteAheadLog.replay(path))
+        assert recs[0]["obj"].spec.name == "c"
+        assert recs[1]["t"] == "DELETED" and "obj" not in recs[1]
+
+
+# ---------------------------------------------------------------------------
+# Journal + recovery determinism
+# ---------------------------------------------------------------------------
+
+class TestJournalRecovery:
+    def _random_ops(self, store, rng, journal, rounds=120):
+        names = []
+        for i in range(rounds):
+            op = rng.random()
+            if op < 0.35 or not names:
+                name = f"c{i}"
+                store.create(chip_claim(name, rng.randint(1, 4)))
+                names.append(name)
+            elif op < 0.55:
+                name = rng.choice(names)
+                store.update_spec("ResourceClaim", name,
+                                  lambda c: setattr(c.spec.requests[0],
+                                                    "count", rng.randint(1, 8)))
+            elif op < 0.8:
+                store.set_condition(
+                    "ResourceClaim", rng.choice(names),
+                    Condition(CONDITION_ALLOCATED, TRUE,
+                              reason=f"r{rng.randint(0, 5)}",
+                              observed_generation=rng.randint(1, 3)))
+            elif op < 0.9:
+                store.set_output("ResourceClaim", rng.choice(names),
+                                 "note", {"i": i, "fp": (i, "x")})
+            else:
+                name = names.pop(rng.randrange(len(names)))
+                store.delete("ResourceClaim", name)
+            if rng.random() < 0.2:
+                journal.flush()
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_randomized_event_sequences_replay_identically(self, tmp_path,
+                                                           seed):
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / f"s{seed}"),
+                               flush_batch=1)
+        journal.attach()
+        self._random_ops(store, random.Random(seed), journal)
+        journal.close()
+        recovered, info = recover_store(str(tmp_path / f"s{seed}"))
+        assert store_dump_json(recovered) == store_dump_json(store)
+        assert recovered.resource_version == store.resource_version
+
+    def test_snapshot_compaction_equivalence(self, tmp_path):
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"),
+                               flush_batch=1, snapshot_every=16)
+        journal.attach()
+        self._random_ops(store, random.Random(42), journal, rounds=200)
+        journal.close()
+        assert journal.snapshots >= 3          # compaction actually ran
+        # old segments were reaped: at most one snapshot + one wal left
+        files = sorted(os.listdir(tmp_path / "s"))
+        assert len([f for f in files if f.startswith("snapshot-")]) == 1
+        assert len([f for f in files if f.startswith("wal-")]) == 1
+        recovered, _ = recover_store(str(tmp_path / "s"))
+        assert store_dump_json(recovered) == store_dump_json(store)
+
+    def test_wal_crash_point_fuzz_on_store_events(self, tmp_path):
+        """Truncate the journal's WAL at every byte of the last frame."""
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"), flush_batch=1)
+        journal.attach()
+        for i in range(4):
+            store.create(chip_claim(f"c{i}", 1))
+            journal.flush()
+        journal.close()
+        wal_path = journal.wal.path
+        data = open(wal_path, "rb").read()
+        pos, frames = 0, []
+        while pos < len(data):
+            frames.append(pos)
+            pos += 19 + int(data[pos + 9:pos + 17], 16)
+        with_last = store_dump_json(store)
+        store.delete("ResourceClaim", "c3")     # state minus the last frame
+        # rebuild "without last" reference via a fresh replayed store
+        for cut in range(frames[-1], len(data) + 1):
+            with open(wal_path, "wb") as f:
+                f.write(data[:cut])
+            recovered, _ = recover_store(str(tmp_path / "s"))
+            got = store_dump_json(recovered)
+            names = {o.meta.name
+                     for o in recovered.list_objects("ResourceClaim")}
+            if cut == len(data):
+                assert got == with_last
+            else:
+                assert names == {"c0", "c1", "c2"}, \
+                    f"cut at {cut}: unexpected survivors {names}"
+
+    def test_attach_refuses_to_clobber_existing_state(self, tmp_path):
+        store = ApiStore()
+        j1 = StoreJournal(store, str(tmp_path / "s"))
+        j1.attach()
+        store.create(chip_claim("a", 1))
+        j1.close()
+        from repro.api import RecoveryError
+        with pytest.raises(RecoveryError):
+            StoreJournal(ApiStore(), str(tmp_path / "s")).attach()
+
+    def test_recover_resume_journal_continues(self, tmp_path):
+        plane = make_plane(state_dir=str(tmp_path / "s"))
+        plane.submit(chip_claim("a", 2))
+        plane.reconcile()
+        plane.journal.sync()
+        plane2 = ControlPlane.recover(str(tmp_path / "s"),
+                                      _fresh_registry(), None)
+        plane2.submit(chip_claim("b", 2))
+        plane2.reconcile()
+        plane2.journal.sync()
+        recovered, _ = recover_store(str(tmp_path / "s"))
+        names = {o.meta.name for o in recovered.list_objects("ResourceClaim")}
+        assert names == {"a", "b"}
+
+
+def _fresh_registry(side=4):
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery + adoption
+# ---------------------------------------------------------------------------
+
+class TestAdoption:
+    def _crashed_plane(self, tmp_path, n_claims=6):
+        plane = make_plane(state_dir=str(tmp_path / "s"))
+        for i in range(n_claims):
+            plane.submit(chip_claim(f"c{i}", 2))
+        plane.submit(Workload(claim="c0", build_mesh=False,
+                              axes=[AxisSpec("data", 2, "y")]),
+                     name="job")
+        plane.wait_for("Workload", "job")
+        plane.journal.sync()
+        return plane
+
+    def test_adopted_allocations_byte_identical_zero_reallocation(
+            self, tmp_path):
+        plane = self._crashed_plane(tmp_path)
+        pre = allocation_records(plane.store)
+        # "crash": recover into a fresh registry/cluster/pool
+        plane2 = ControlPlane.recover(str(tmp_path / "s"), _fresh_registry(),
+                                      resume_journal=False)
+        assert plane2.adoption_stats["adopted"] == 6
+        assert plane2.adoption_stats["lost"] == 0
+        assert allocation_records(plane2.store) == pre
+        rounds = plane2.reconcile()
+        # the fixpoint pass re-examined everything but re-allocated nothing:
+        # allocation bytes AND Allocated-condition transition history match
+        assert allocation_records(plane2.store) == pre, \
+            f"re-allocation after {rounds} rounds"
+
+    def test_prepared_claims_reprime_node_drivers(self, tmp_path):
+        plane = self._crashed_plane(tmp_path, n_claims=2)
+        plane2 = ControlPlane.recover(str(tmp_path / "s"), _fresh_registry(),
+                                      resume_journal=False)
+        for obj in plane2.store.list_objects("ResourceClaim"):
+            assert obj.spec.prepared
+            assert plane2.is_prepared(obj.spec), \
+                f"{obj.meta.name}: driver cache not re-primed"
+
+    def test_workload_keeps_plan_and_ready_through_wal_recovery(
+            self, tmp_path):
+        plane = self._crashed_plane(tmp_path)
+        ready_before = plane.store.get("Workload", "job") \
+            .condition(CONDITION_READY)
+        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
+        reg = DriverRegistry()
+        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        plane2 = ControlPlane.recover(str(tmp_path / "s"), reg, cluster,
+                                      resume_journal=False)
+        obj = plane2.store.get("Workload", "job")
+        # WAL records are pickled: the MeshPlan survived recovery intact
+        assert obj.status.outputs["plan"] is not None
+        plane2.reconcile()
+        after = obj.condition(CONDITION_READY)
+        assert after.true and after.reason == ready_before.reason
+        assert after.last_transition == ready_before.last_transition
+
+    def test_codec_recovered_workload_rederives_dropped_plan(self, tmp_path):
+        """The JSON-codec path (checkpoint store dumps) drops derived
+        artifacts; adopt() strips the markers and the AttachmentController
+        re-plans deterministically without touching the allocation."""
+        plane = self._crashed_plane(tmp_path)
+        pre = allocation_records(plane.store)
+        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
+        reg = DriverRegistry()
+        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        store = load_store(dump_store(plane.store))
+        obj = store.get("Workload", "job")
+        assert isinstance(obj.status.outputs["plan"], Unpersisted)
+        plane2 = ControlPlane(reg, cluster, store=store)
+        plane2.adopt()
+        assert "plan" not in obj.status.outputs        # marker stripped
+        plane2.reconcile()
+        assert obj.status.outputs["plan"] is not None  # re-derived
+        assert obj.is_true(CONDITION_READY, current=True)
+        assert allocation_records(plane2.store) == pre
+
+    def test_lost_devices_heal_through_allocation_controller(self, tmp_path):
+        plane = self._crashed_plane(tmp_path, n_claims=2)
+        # recover against a SMALLER cluster: some allocated chips vanished
+        small = build_tpu_cluster(1, TpuPodSpec(x=2, y=2))
+        reg = DriverRegistry()
+        reg.add(TpuDriver(small)).add(IciDriver(small))
+        plane2 = ControlPlane.recover(str(tmp_path / "s"), reg, small,
+                                      resume_journal=False)
+        assert plane2.adoption_stats["lost"] >= 1
+        plane2.reconcile()
+        for obj in plane2.store.list_objects("ResourceClaim"):
+            cond = obj.condition(CONDITION_ALLOCATED)
+            assert cond.true and cond.observed_generation == \
+                obj.meta.generation
+
+    def test_template_stamping_continues_after_recovery(self, tmp_path):
+        plane = make_plane(state_dir=str(tmp_path / "s"))
+        plane.submit(ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+            requests=[DeviceRequest(name="chips",
+                                    device_class="tpu.google.com", count=2)],
+            topology_scope="cluster")))
+        plane.submit(Workload(claim_template="rep", replicas=2,
+                              role="serve"), name="srv")
+        plane.wait_for("Workload", "srv")
+        stamped = {o.meta.name for o in plane.store.list_objects(
+            "ResourceClaim")}
+        plane.journal.sync()
+        plane2 = ControlPlane.recover(str(tmp_path / "s"), _fresh_registry(),
+                                      resume_journal=False)
+        plane2.edit("Workload", "srv", lambda w: setattr(w, "replicas", 3))
+        plane2.wait_for("Workload", "srv")
+        after = {o.meta.name for o in plane2.store.list_objects(
+            "ResourceClaim")}
+        assert stamped < after                    # old replicas adopted
+        assert len(after) == 3                    # +1 fresh, no collision
+
+
+# ---------------------------------------------------------------------------
+# Thread safety (informer prerequisite)
+# ---------------------------------------------------------------------------
+
+class TestThreadSafety:
+    def test_concurrent_creates_updates_and_watches(self):
+        store = ApiStore()
+        errors = []
+        n_threads, per_thread = 8, 40
+
+        def writer(t):
+            try:
+                for i in range(per_thread):
+                    name = f"c-{t}-{i}"
+                    store.create(chip_claim(name, 1))
+                    store.set_condition(
+                        "ResourceClaim", name,
+                        Condition(CONDITION_ALLOCATED, TRUE,
+                                  observed_generation=1))
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        def reader():
+            try:
+                w = store.watch("ResourceClaim")
+                seen = 0
+                for _ in range(500):
+                    seen += len(w.poll())
+                    store.list_objects("ResourceClaim")
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        threads += [threading.Thread(target=reader) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert store.count("ResourceClaim") == n_threads * per_thread
+        # versions stayed strictly monotonic along the log
+        versions = [e.resource_version for e in store._log]
+        assert versions == sorted(versions) and len(set(versions)) == \
+            len(versions)
+
+    def test_journaled_store_survives_concurrent_writers(self, tmp_path):
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"), flush_batch=8)
+        journal.attach()
+
+        def writer(t):
+            for i in range(30):
+                store.create(chip_claim(f"c-{t}-{i}", 1))
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        journal.close()
+        recovered, _ = recover_store(str(tmp_path / "s"))
+        assert store_dump_json(recovered) == store_dump_json(store)
+
+
+# ---------------------------------------------------------------------------
+# Admission validation
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_count_beyond_capacity_rejected_at_create(self):
+        plane = make_plane()                       # 16 chips
+        with pytest.raises(AdmissionError):
+            plane.submit(chip_claim("big", 64))
+        assert plane.store.try_get("ResourceClaim", "big") is None
+
+    def test_feasible_count_with_impossible_selector_still_admitted(self):
+        # admission is a *capacity summary* check; selector satisfiability
+        # stays a runtime concern (Unsatisfiable condition + backoff)
+        plane = make_plane()
+        plane.submit(chip_claim(
+            "picky", 4, ['device.attributes["generation"] == "v9"']))
+        plane.reconcile()
+        cond = plane.store.get("ResourceClaim", "picky") \
+            .condition(CONDITION_ALLOCATED)
+        assert not cond.true and cond.reason == "Unsatisfiable"
+
+    def test_busy_devices_do_not_trigger_admission(self):
+        plane = make_plane()                       # 16 chips
+        plane.submit(chip_claim("first", 12))
+        plane.reconcile()
+        # 12/16 allocated; a 8-chip claim is admitted (summary counts all
+        # devices) and waits for capacity at runtime
+        plane.submit(chip_claim("second", 8))
+        plane.reconcile()
+        cond = plane.store.get("ResourceClaim", "second") \
+            .condition(CONDITION_ALLOCATED)
+        assert not cond.true
+
+    def test_unknown_class_is_admitted(self):
+        plane = make_plane()
+        claim = ResourceClaim(name="later", spec=ClaimSpec(
+            requests=[DeviceRequest(name="x", device_class="not.yet",
+                                    count=99)],
+            topology_scope="cluster"))
+        plane.submit(claim)                        # no summary -> no verdict
+        assert plane.store.try_get("ResourceClaim", "later") is not None
+
+    def test_template_workload_surfaces_admission_rejection(self):
+        plane = make_plane()                       # 16 chips
+        plane.submit(ResourceClaimTemplate(name="fat", spec=ClaimSpec(
+            requests=[DeviceRequest(name="chips",
+                                    device_class="tpu.google.com",
+                                    count=64)],
+            topology_scope="cluster")))
+        plane.submit(Workload(claim_template="fat", replicas=1), name="w")
+        plane.reconcile()
+        cond = plane.store.get("Workload", "w").condition(CONDITION_READY)
+        assert not cond.true and cond.reason == "AdmissionRejected"
+
+    def test_admission_off_restores_runtime_behavior(self):
+        plane = make_plane(admission=False)
+        plane.submit(chip_claim("big", 64))
+        plane.reconcile()
+        cond = plane.store.get("ResourceClaim", "big") \
+            .condition(CONDITION_ALLOCATED)
+        assert cond.reason == "Unsatisfiable"

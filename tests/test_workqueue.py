@@ -131,8 +131,13 @@ class TestEventReconcile:
         assert "job" in plane._claim_owners["c"]
 
     def test_slice_change_requeues_unsatisfiable_claim(self):
-        """New capacity arriving via a slice event wakes blocked claims."""
-        plane = make_plane(side=2)            # 4 chips
+        """New capacity arriving via a slice event wakes blocked claims.
+
+        admission=False: this test wants the claim to *land* while the
+        pool is too small and converge when capacity grows — the
+        level-triggered arm the admission validator deliberately skips.
+        """
+        plane = make_plane(side=2, admission=False)   # 4 chips
         plane.submit(chip_claim("big", 8))
         plane.reconcile()
         cobj = plane.store.get("ResourceClaim", "big")
@@ -146,13 +151,13 @@ class TestEventReconcile:
         assert cobj.is_true(CONDITION_ALLOCATED, current=True)
 
     def test_unsatisfiable_claim_accumulates_backoff(self):
-        plane = make_plane(side=2)
+        plane = make_plane(side=2, admission=False)
         plane.submit(chip_claim("big", 64))
         plane.reconcile()
         assert plane.queue.failures("ResourceClaim", "big") >= 1
 
     def test_spec_edit_clears_backoff(self):
-        plane = make_plane(side=2)            # 4 chips
+        plane = make_plane(side=2, admission=False)   # 4 chips
         plane.submit(chip_claim("big", 64))
         plane.reconcile()
         assert plane.queue.failures("ResourceClaim", "big") >= 1
