@@ -18,6 +18,8 @@ Framework perf:
   bench_recovery   -> WAL append overhead per reconcile round + crash
                       recovery latency vs store size (byte-identical
                       adoption check)
+  bench_informer   -> threaded informer overlap: step-time overhead of
+                      background reconcile vs the blocking inline arm
 
 The control-plane sections write ``BENCH_reconcile.json`` at the repo
 root — the perf trajectory CI and reviewers diff across PRs.
@@ -69,7 +71,7 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "recovery", "roofline", "kernels"]
+            "recovery", "informer", "roofline", "kernels"]
 
 
 def main() -> None:
@@ -105,6 +107,10 @@ def main() -> None:
         elif section == "recovery":
             from . import bench_recovery
             perf["recovery"] = bench_recovery.main(
+                ["--smoke"] if args.smoke else [])
+        elif section == "informer":
+            from . import bench_informer
+            perf["informer"] = bench_informer.main(
                 ["--smoke"] if args.smoke else [])
         elif section == "roofline":
             from . import bench_roofline

@@ -1,9 +1,13 @@
 """Quickstart: the declarative KND control plane end-to-end (CPU).
 
 The paper's architecture, not just its objects: nothing here sequences
-allocate/prepare/attach by hand. We *submit API objects* and wait for a
-``Ready`` condition — the control plane's reconcilers do the workflow
-(paper Fig. 7) against a simulated v5e pod:
+allocate/prepare/attach by hand — and nothing *blocks* on it either. A
+:class:`~repro.api.runtime.ControlPlaneRuntime` runs the reconcilers in
+background informer threads; we submit API objects, park on a
+``Ready`` condition-waiter future, and the control plane keeps
+converging underneath the training loop (the KND assumption: drivers
+watch and converge while pods execute). The workflow (paper Fig. 7)
+against a simulated v5e pod:
 
   1. drivers discover the fabric; slices are mirrored as API objects;
   2. a ResourceClaim with CEL selectors + a Workload are submitted;
@@ -12,13 +16,16 @@ allocate/prepare/attach by hand. We *submit API objects* and wait for a
   5. the AttachmentController plans the mesh, fires the NRI hooks and
      executes the OCI AttachmentSpec through the MeshRuntime;
   6. the WorkloadController flips Ready; a (tiny) model trains on the
-     mesh read off the workload's status.
+     mesh read off the workload's status — informers still running.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--state-dir DIR]
+                                                   [--reconcile-mode inline]
 
 With ``--state-dir`` the store is journaled (WAL + snapshots); a second
 run against the same directory *recovers* it and adopts the in-flight
 claim instead of re-allocating (see docs/RECOVERY.md).
+``--reconcile-mode inline`` keeps the blocking reference arm: the
+caller drives ``reconcile()`` itself, no background threads.
 """
 
 import argparse
@@ -30,13 +37,17 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--state-dir", default=None,
                 help="durable control-plane state (WAL + snapshots); an "
                      "existing directory is recovered and adopted")
+ap.add_argument("--reconcile-mode", default="threaded",
+                choices=["threaded", "inline"],
+                help="threaded: background informer runtime (default); "
+                     "inline: blocking reconcile() reference arm")
 args = ap.parse_args()
 
 import jax
 import jax.numpy as jnp
 
 from repro import core
-from repro.api import ControlPlane, Workload
+from repro.api import ControlPlane, ControlPlaneRuntime, Workload
 from repro.configs.registry import smoke_config
 from repro.data.pipeline import SyntheticLMData
 from repro.parallel.sharding import ShardingRules, use_rules
@@ -57,6 +68,12 @@ if plane.recovery_info is None:
           f"{len(plane.store.list_objects('ResourceSlice'))} ResourceSlice "
           f"objects ({len(registry.pool.nodes())} nodes)")
 
+runtime = None
+if args.reconcile_mode == "threaded":
+    runtime = ControlPlaneRuntime(plane).start()
+    print("[1] informer runtime started "
+          f"({runtime.worker_count} workers, 1 informer thread)")
+
 # 2. submit declarative intent: a claim with CEL selection + a workload ----
 if plane.store.try_get("ResourceClaim", "quickstart") is None:
     plane.submit(core.ResourceClaim(name="quickstart", spec=core.ClaimSpec(
@@ -73,7 +90,7 @@ if plane.store.try_get("Workload", "quickstart-job") is None:
 print(f"[2] submitted ResourceClaim/quickstart + Workload/quickstart-job "
       f"(store v{plane.store.resource_version})")
 
-# 3. reconcile: controllers do allocate -> prepare -> attach ---------------
+# 3. converge: background informers (or inline reconcile) do the workflow --
 job = plane.wait_for("Workload", "quickstart-job")   # Ready condition
 print(f"[3] reconciled: {job.conditions_summary()}")
 lat = job.status.outputs["phase_latency_s"]
@@ -86,7 +103,7 @@ mesh = job.status.outputs["mesh"]
 print(f"[4] {plan.summary()}")
 print(f"    mesh attached: {dict(mesh.shape)}")
 
-# 5. train ------------------------------------------------------------------
+# 5. train — the informer threads keep watching while steps execute --------
 cfg = smoke_config("h2o-danube-1.8b")
 data = SyntheticLMData(cfg, global_batch=8, seq_len=64)
 opt = AdamW(constant_schedule(1e-3))
@@ -99,5 +116,10 @@ with use_rules(ShardingRules(mesh=mesh)):
         state, metrics = step(state, batch)
         if s % 3 == 0:
             print(f"[5] step {s}: loss={float(metrics['loss']):.3f}")
+if runtime is not None:
+    stats = runtime.stop()
+    print(f"[5] informer runtime stopped: {stats.reconciled} reconciles, "
+          f"{stats.informer_rounds} informer rounds, "
+          f"{stats.panics} panics")
 print("done — the same object submission drives the 256/512-chip "
       "production mesh in repro.launch.dryrun")

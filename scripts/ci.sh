@@ -7,14 +7,25 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== tier-1: pytest (global deadlock guard armed) =="
+# PYTEST_GLOBAL_TIMEOUT (tests/conftest.py): past the budget every
+# thread's stack is dumped via faulthandler and the run hard-exits —
+# a deadlocked informer fails the gate fast instead of hanging it.
+# tests/test_kill_recover.py runs here too (the SIGKILL smoke and
+# tier-1 share scripts/kill_recover_smoke.py as one implementation).
+PYTEST_GLOBAL_TIMEOUT=2400 python -m pytest -x -q
 
-echo "== smoke: declarative quickstart (journaled) =="
+echo "== chaos: informer stress, fixed seed sweep =="
+# the randomized concurrent-churn + fault-injection stress at pinned
+# seeds, with its own tighter deadlock budget
+PYTEST_GLOBAL_TIMEOUT=900 STRESS_SEEDS=7,23,42 \
+  python -m pytest -x -q tests/test_runtime.py -k stress
+
+echo "== smoke: declarative quickstart (journaled, threaded informer) =="
 python examples/quickstart.py --state-dir "$(mktemp -d)/state"
 
-echo "== smoke: kill-and-recover (WAL crash recovery) =="
-python scripts/kill_recover_smoke.py
+# (the kill-and-recover SIGKILL smoke now runs inside tier-1 as
+# tests/test_kill_recover.py — no second standalone invocation)
 
 echo "== smoke: control-plane scale bench (reduced sizes) =="
 # asserts sweep/event allocation equivalence and surfaces the
@@ -43,6 +54,24 @@ print("recovery:",
       "wal_overhead", str(o["overhead_pct"]) + "%",
       "(" + str(o["per_claim_overhead_us"]) + "us/claim),",
       "recover_ms@" + str(r["recovery"][-1]["claims"]), r["recovery"][-1]["recover_ms"])
+'
+
+echo "== smoke: informer overlap bench (reduced sizes) =="
+# overlapped reconcile must stay cheaper than the blocking arm (with
+# noise slack) and must not explode outright; the tight (<=5%)
+# acceptance number is recorded from a quiet machine in
+# BENCH_reconcile.json — CI boxes are too noisy for a hard 5% gate
+python -m benchmarks.bench_informer --smoke \
+  | python -c '
+import json, sys
+r = json.load(sys.stdin)
+ov, bl = r["overlap_overhead_pct"], r["blocking_overhead_pct"]
+assert ov < 25, f"overlap overhead exploded: {ov}%"
+assert ov < bl + 15, \
+    f"threaded overlap ({ov}%) no longer beats blocking ({bl}%) + slack"
+print("informer:", "overlap", str(ov) + "%,",
+      "blocking", str(bl) + "%,",
+      "step_ms", r["step_ms"])
 '
 
 echo "CI_OK"

@@ -14,6 +14,10 @@ The CI gate for the durable control plane (docs/RECOVERY.md):
    spurious re-allocations).
 
 Usage:  PYTHONPATH=src python scripts/kill_recover_smoke.py
+
+Also runs inside tier-1 as ``tests/test_kill_recover.py`` (marked
+``slow``; skip with ``-m "not slow"``) — the pytest wrapper imports this
+module, so CI and the test suite share one implementation.
 """
 
 from __future__ import annotations

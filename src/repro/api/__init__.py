@@ -22,6 +22,9 @@ from .persistence import (RecoveryError, RecoveryInfo, StoreJournal,
                           load_store, recover_store, store_dump_json,
                           store_fingerprint)
 from .workqueue import WorkQueue
+from .chaos import FaultInjector, InjectedFault, sync_point
+from .runtime import (ConditionWaiter, ControlPlaneRuntime, RuntimeStats,
+                      TokenBucket)
 
 __all__ = [
     "ApiObject", "Condition", "ObjectMeta", "ObjectStatus", "Workload",
@@ -37,4 +40,6 @@ __all__ = [
     "allocation_fingerprint", "allocation_records", "dump_store",
     "has_state", "load_store", "recover_store", "store_dump_json",
     "store_fingerprint",
+    "FaultInjector", "InjectedFault", "sync_point",
+    "ConditionWaiter", "ControlPlaneRuntime", "RuntimeStats", "TokenBucket",
 ]

@@ -1,0 +1,158 @@
+"""Fault injection for the threaded control plane: named sync points.
+
+The informer runtime (:mod:`repro.api.runtime`) is only trustworthy if
+its concurrency survives *adversarial* schedules — TSoR (arXiv
+2305.10621) and the Slingshot-RDMA work (arXiv 2508.09663) both stress
+exactly this: control-plane convergence racing data-plane traffic under
+injected faults. This module is the hook that makes such schedules
+reproducible:
+
+* **Sync points.** Hot paths in the store, the work queue, the WAL
+  journal, and the runtime's worker loops call
+  ``sync_point("store.write", ...)`` etc. With no injector installed
+  this is one global read and a ``None`` check — cheap enough to leave
+  in production paths.
+* **Seeded delays.** An installed :class:`FaultInjector` sleeps at
+  matching points with a seeded RNG, forcing store-write interleavings,
+  queue hand-off races and journal-flush overlaps that a quiet machine
+  would never schedule. Same seed → same fault decisions (the *sleep
+  targets* are deterministic; the OS still owns the actual schedule).
+* **Worker kills.** Points marked ``killable=True`` (only the runtime's
+  worker reconcile step — never mid-store-write, where an exception
+  would tear an invariant) may raise :class:`InjectedFault`; the runtime
+  treats it as a worker panic and exercises its crash-restart +
+  WAL-safe-journaling path.
+
+Install per test via :func:`installed` (a context manager), or globally
+with :func:`install`. ``tests/chaos.py`` builds the stress harness on
+top of this.
+
+Known sync points (prefix-matchable, e.g. ``"store."`` hits all three):
+
+====================          =================================================
+``store.create``              before admission validators run
+``store.write``               inside ``ApiStore._bump`` (store lock held)
+``workqueue.add``             a key becoming dirty
+``workqueue.pop``             a reconcile round popping its batch
+``journal.flush``             WAL flush window serialization begins
+``wal.append``                one frame about to hit the file
+``runtime.informer.pump``     informer event-pump iteration
+``runtime.worker.pop``        worker picked a key off its inbox (killable)
+``runtime.worker.reconcile``  controllers about to run for a key (killable)
+====================          =================================================
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from contextlib import contextmanager
+from typing import Dict, Iterable, Iterator, Optional, Tuple
+
+__all__ = ["FaultInjector", "InjectedFault", "sync_point", "install",
+           "installed", "SYNC_POINTS"]
+
+SYNC_POINTS = (
+    "store.create", "store.write",
+    "workqueue.add", "workqueue.pop",
+    "journal.flush", "wal.append",
+    "runtime.informer.pump", "runtime.worker.pop",
+    "runtime.worker.reconcile",
+)
+
+
+class InjectedFault(RuntimeError):
+    """A chaos-injected worker panic (never raised without an injector)."""
+
+
+class FaultInjector:
+    """Seeded, thread-safe fault source for the control plane's sync points.
+
+    ``delay_points`` / ``kill_points`` are exact names or prefixes from
+    :data:`SYNC_POINTS`. Delays are uniform in ``(0, max_delay_s)`` with
+    probability ``delay_prob`` per hit; kills fire with ``kill_prob`` at
+    killable points, at most ``max_kills`` times total (so a stress run
+    always converges once the kill budget is spent).
+    """
+
+    def __init__(self, seed: int = 0, *,
+                 delay_points: Iterable[str] = ("store.", "workqueue.",
+                                                "journal.", "wal.",
+                                                "runtime."),
+                 delay_prob: float = 0.05, max_delay_s: float = 0.002,
+                 kill_points: Iterable[str] = ("runtime.worker.",),
+                 kill_prob: float = 0.0, max_kills: int = 4):
+        self.seed = seed
+        self.delay_points = tuple(delay_points)
+        self.delay_prob = delay_prob
+        self.max_delay_s = max_delay_s
+        self.kill_points = tuple(kill_points)
+        self.kill_prob = kill_prob
+        self.max_kills = max_kills
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        # telemetry: point -> hits / delays / kills (assertable in tests)
+        self.hits: Dict[str, int] = {}
+        self.delays = 0
+        self.kills = 0
+
+    @staticmethod
+    def _matches(point: str, patterns: Tuple[str, ...]) -> bool:
+        return any(point == p or point.startswith(p) for p in patterns)
+
+    def fire(self, point: str, killable: bool = False, **ctx: object) -> None:
+        """Called from a sync point; may sleep or (if killable) raise."""
+        delay = 0.0
+        kill = False
+        with self._lock:
+            self.hits[point] = self.hits.get(point, 0) + 1
+            if (killable and self.kills < self.max_kills
+                    and self._matches(point, self.kill_points)
+                    and self._rng.random() < self.kill_prob):
+                self.kills += 1
+                kill = True
+            elif (self._matches(point, self.delay_points)
+                    and self._rng.random() < self.delay_prob):
+                self.delays += 1
+                delay = self._rng.uniform(0.0, self.max_delay_s)
+        if kill:
+            raise InjectedFault(f"injected worker kill at {point} "
+                                f"(kill #{self.kills}, seed {self.seed})")
+        if delay:
+            time.sleep(delay)
+
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            return {"seed": self.seed, "hits": dict(self.hits),
+                    "delays": self.delays, "kills": self.kills}
+
+
+# The installed injector. One global slot (not thread-local): the whole
+# point is perturbing *cross-thread* schedules, and reads must stay a
+# single attribute load on the production path.
+_active: Optional[FaultInjector] = None
+
+
+def sync_point(point: str, killable: bool = False, **ctx: object) -> None:
+    """Fire the installed injector at ``point``; no-op when none is."""
+    inj = _active
+    if inj is not None:
+        inj.fire(point, killable=killable, **ctx)
+
+
+def install(injector: Optional[FaultInjector]) -> Optional[FaultInjector]:
+    """Install (or with None, clear) the global injector; returns previous."""
+    global _active
+    prev, _active = _active, injector
+    return prev
+
+
+@contextmanager
+def installed(injector: FaultInjector) -> Iterator[FaultInjector]:
+    """Scoped install — the stress tests' per-seed harness."""
+    prev = install(injector)
+    try:
+        yield injector
+    finally:
+        install(prev)

@@ -22,7 +22,10 @@ converge through the same code path (the elastic story of the paper's
 
 from __future__ import annotations
 
+import itertools
+import threading
 import time
+from contextlib import contextmanager
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..core.allocator import AllocationError, StructuredAllocator
@@ -242,11 +245,15 @@ class WorkloadController(Controller):
         admission_msg = ""
         owned = store.list_objects("ResourceClaim",
                                    selector={"workload": obj.meta.name})
+        stamped = 0
         while len(owned) < wl.replicas:
             claim = tmpl.spec.instantiate(owner=obj.meta.name)
             try:
                 owned.append(store.create(claim,
                                           labels={"workload": obj.meta.name}))
+                # count *landed* stamps only: a rejected stamp would
+                # re-touch the template every retry and never fixpoint
+                stamped += 1
             except AdmissionError as e:
                 # strip the stamped claim's name (counter-suffixed) so the
                 # surfaced condition message is stable across retries —
@@ -254,6 +261,17 @@ class WorkloadController(Controller):
                 admission_msg = str(e).split(
                     "rejected at admission: ", 1)[-1][:240]
                 break
+        if stamped:
+            # stamping advanced the template's name counter *in memory*
+            # only — without a status write the WAL's last record of the
+            # template keeps the stale counter, and a recovered control
+            # plane would stamp colliding replica names. The touch emits
+            # a MODIFIED event so the journal re-captures the template
+            # (counter included) at its next flush.
+            store.update_status(
+                "ResourceClaimTemplate", tmpl.meta.name,
+                lambda st, n=stamped: st.outputs.__setitem__(
+                    "stamped_total", st.outputs.get("stamped_total", 0) + n))
         while len(owned) > wl.replicas:
             extra = owned.pop()
             plane.unprepare(extra.spec)
@@ -352,13 +370,15 @@ class ControlPlane:
     controller act on each object of its kind.
     """
 
+    RECONCILE_MODES = ("event", "sweep", "inline")
+
     def __init__(self, registry: DriverRegistry, cluster: Any = None,
                  store: Optional[ApiStore] = None,
                  runtime: Optional[MeshRuntime] = None,
                  reconcile_mode: str = "event",
                  state_dir: Optional[str] = None,
                  admission: bool = True):
-        if reconcile_mode not in ("event", "sweep"):
+        if reconcile_mode not in self.RECONCILE_MODES:
             raise ValueError(f"unknown reconcile_mode {reconcile_mode!r}")
         self.registry = registry
         self.store = store or ApiStore()
@@ -374,6 +394,13 @@ class ControlPlane:
         self._watch = self.store.watch()
         self.reconcile_mode = reconcile_mode
         self.queue = WorkQueue()
+        # serializes controller critical sections: the inline loop, any
+        # threaded informer workers (repro.api.runtime), and out-of-band
+        # pool/registry mutations (ControlPlane.mutate) all take it
+        self.reconcile_lock = threading.RLock()
+        # the running ControlPlaneRuntime, when one is attached (set by
+        # runtime.start(); None in blocking/"inline" operation)
+        self.informer = None
         # processing order: claims converge before the workloads rolling
         # them up (one fewer round per dependency hop)
         self._kind_order: List[str] = []
@@ -523,7 +550,7 @@ class ControlPlane:
         so derived artifacts (plan, mesh) are rebuilt by the
         AttachmentController — deterministically, from the same seed.
         """
-        from .persistence import Unpersisted
+        from .persistence import Unpersisted, _count_value
         self.registry.run_discovery()
         self.sync_inventory()
         stats = {"adopted": 0, "lost": 0, "prepared": 0, "rederive": 0}
@@ -547,6 +574,24 @@ class ControlPlane:
                 # devices vanished while we were down — leave the stale
                 # allocation for the AllocationController to heal
                 stats["lost"] += 1
+        # re-derive template name counters from the claims that actually
+        # exist: a crash can persist stamped claims whose ADDED events
+        # flushed before the template's counter-touch did, and a stale
+        # counter would stamp colliding replica names after adoption
+        claim_names = [o.meta.name
+                       for o in self.store.list_objects("ResourceClaim")]
+        for tobj in self.store.list_objects("ResourceClaimTemplate"):
+            tmpl = tobj.spec
+            prefix = tmpl.name + "-"
+            used = -1
+            for name in claim_names:
+                if name.startswith(prefix):
+                    tail = name.rsplit("-", 1)[-1]
+                    if tail.isdigit():
+                        used = max(used, int(tail))
+            if used >= 0 and _count_value(tmpl._counter) <= used:
+                tmpl._counter = itertools.count(used + 1)
+                stats["counter_healed"] = stats.get("counter_healed", 0) + 1
         for obj in self.store.list_objects("Workload"):
             self.queue.add("Workload", obj.meta.name)
             outputs = obj.status.outputs
@@ -611,6 +656,30 @@ class ControlPlane:
     def edit(self, kind: str, name: str, mutate) -> ApiObject:
         """Spec edit: bumps generation; reconcilers converge on it."""
         return self.store.update_spec(kind, name, mutate)
+
+    @contextmanager
+    def mutate(self):
+        """Serialize an out-of-band mutation against the reconcile loop.
+
+        Store writes are already thread-safe; this is for mutations that
+        bypass the store — ``pool.withdraw_node``, direct allocator
+        calls, registry surgery — which must not interleave with a
+        running informer worker's controller section. A no-op cost when
+        nothing is running (uncontended RLock). Wakes the informer so
+        level-triggered requeues (released capacity, inventory sync)
+        happen promptly.
+        """
+        with self.reconcile_lock:
+            yield
+            # clear the idle flag BEFORE releasing the lock: a quiesce
+            # check in the gap could otherwise settle-fail waiters whose
+            # convergence this very mutation (e.g. freed capacity, which
+            # emits no store event) is about to enable
+            informer = self.informer   # single read: stop() may null it
+            if informer is not None:
+                informer._quiesced.clear()
+        if informer is not None:
+            informer._wake.set()
 
     # -- event routing (dependency edges) ------------------------------------
     def _requeue_claims_for_nodes(self, nodes: Set[str]) -> None:
@@ -777,12 +846,20 @@ class ControlPlane:
           for the scale benchmark and equivalence tests.
         """
         mode = mode or self.reconcile_mode
-        if mode not in ("event", "sweep"):
+        if mode not in self.RECONCILE_MODES:
             raise ValueError(f"unknown reconcile mode {mode!r}")
+        if self.informer is not None and self.informer.running:
+            raise RuntimeError(
+                "reconcile() called while a ControlPlaneRuntime informer "
+                "is running; use plane.informer.wait_ready/wait_quiesce "
+                "(or stop the runtime first)")
         try:
-            if mode == "sweep":
-                return self._reconcile_sweep(max_rounds)
-            return self._reconcile_events(max_rounds)
+            with self.reconcile_lock:
+                if mode == "sweep":
+                    return self._reconcile_sweep(max_rounds)
+                # "inline" is the blocking reference arm of the threaded
+                # runtime — same event loop, driven by the caller
+                return self._reconcile_events(max_rounds)
         finally:
             # batched durability: the journal flushes once a worthwhile
             # window has accumulated (also on the error path, so a crash
@@ -881,8 +958,15 @@ class ControlPlane:
 
         Synchronous analogue of `kubectl wait --for=condition=...`:
         raises with the object's condition summary if the controllers
-        reach a fixpoint without converging.
+        reach a fixpoint without converging. With a running informer
+        runtime attached, delegates to its condition-waiter future
+        (convergence happens in the background threads).
         """
+        if self.informer is not None and self.informer.running:
+            # generous budget: the inline path had no timeout at all, and
+            # entry points run on loaded machines (jax compiles next door)
+            return self.informer.wait_ready(kind, name, condition=condition,
+                                            timeout=600.0)
         self.reconcile()
         obj = self.store.get(kind, name)
         if not obj.is_true(condition, current=True):

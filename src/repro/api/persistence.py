@@ -59,6 +59,7 @@ from ..core.claims import (AllocatedDevice, AllocationResult, ClaimSpec,
 from ..core.oci import AttachmentSpec, DeviceBinding
 from ..core.planner import AxisSpec
 from ..core.resources import Device, DeviceRef, ResourceSlice
+from .chaos import sync_point
 from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus,
                       Workload, CONDITION_ALLOCATED)
 from .store import ADDED, DELETED, MODIFIED, ApiStore, WatchEvent
@@ -260,14 +261,21 @@ def load_api_object(d: Dict[str, Any]) -> ApiObject:
 
 
 def dump_store(store: ApiStore) -> Dict[str, Any]:
-    """Deterministic full-store dump (objects sorted by kind, name)."""
-    objects = []
-    for obj in sorted(store.list_objects(),
-                      key=lambda o: (o.meta.kind, o.meta.name)):
-        objects.append(dump_api_object(obj))
-    return {"format": FORMAT_VERSION,
-            "resource_version": store.resource_version,
-            "objects": objects}
+    """Deterministic full-store dump (objects sorted by kind, name).
+
+    The store lock is held for the WHOLE dump, not just the listing:
+    with threaded informer workers mutating object status in place, a
+    lock-free encode could serialize a half-updated object (allocation
+    present, condition not yet written) into a checkpoint manifest.
+    """
+    with store.lock:
+        objects = []
+        for obj in sorted(store.list_objects(),
+                          key=lambda o: (o.meta.kind, o.meta.name)):
+            objects.append(dump_api_object(obj))
+        return {"format": FORMAT_VERSION,
+                "resource_version": store.resource_version,
+                "objects": objects}
 
 
 def load_store(dump: Dict[str, Any]) -> ApiStore:
@@ -375,6 +383,7 @@ class WriteAheadLog:
         self._since_sync = 0
 
     def _write_frame(self, payload: bytes, records: int) -> int:
+        sync_point("wal.append", path=self.path, records=records)
         frame = (b"%08x %08x " % (zlib.crc32(payload), len(payload))
                  + payload + b"\n")
         self._f.write(frame)
@@ -617,6 +626,7 @@ class StoreJournal:
         """Serialize the pending window into WAL records. Returns count."""
         if not self._pending or self.wal is None:
             return 0
+        sync_point("journal.flush", pending=len(self._pending))
         t0 = time.perf_counter()
         with self.store.lock:
             pending, self._pending = self._pending, {}

@@ -44,6 +44,7 @@ from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
 
 from ..core.claims import (DeviceClass, ResourceClaim, ResourceClaimTemplate)
 from ..core.resources import ResourceSlice
+from .chaos import sync_point
 from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus, TRUE,
                       Workload)
 
@@ -156,6 +157,9 @@ class ApiStore:
 
     # -- internals ---------------------------------------------------------
     def _bump(self, obj: ApiObject, event_type: str) -> ApiObject:
+        # chaos: stretch the store-lock critical section so concurrent
+        # writers/watchers queue up in adversarial orders
+        sync_point("store.write", kind=obj.meta.kind, name=obj.meta.name)
         obj.meta.resource_version = next(self._version)
         self._last_version = obj.meta.resource_version
         event = WatchEvent(event_type, obj.meta.kind, obj.meta.name,
@@ -193,6 +197,7 @@ class ApiStore:
         name = name or getattr(spec, "name", None)
         if not name:
             raise ApiError(f"{kind} object needs a name")
+        sync_point("store.create", kind=kind, name=name)
         with self._lock:
             for validate in self._validators:
                 validate(kind, spec)

@@ -25,6 +25,8 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List, Optional, Tuple
 
+from .chaos import sync_point
+
 __all__ = ["WorkQueue"]
 
 Key = Tuple[str, str]  # (kind, name)
@@ -49,6 +51,7 @@ class WorkQueue:
     # -- enqueue -------------------------------------------------------------
     def add(self, kind: str, name: str) -> None:
         """Mark (kind, name) dirty; idempotent while already queued."""
+        sync_point("workqueue.add", kind=kind, name=name)
         bucket = self._dirty.setdefault(kind, {})
         if name not in bucket:
             bucket[name] = None
@@ -92,6 +95,7 @@ class WorkQueue:
         claims converge before the workloads that roll them up). Keys
         still inside their backoff window stay queued for a later round.
         """
+        sync_point("workqueue.pop", clock=self._clock)
         self._clock += 1
         out: List[Key] = []
         for kind in kinds:

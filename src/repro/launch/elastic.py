@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from .. import core
-from ..api import ControlPlane, Workload
+from ..api import ControlPlane, ControlPlaneRuntime, Workload
 from ..core.nri import Event, Events
 from ..topology.tpu import TpuCluster
 
@@ -59,19 +59,37 @@ class ElasticController:
     # claim + workload are adopted, not re-allocated); a fresh one is
     # journaled so the *next* controller restart can adopt in turn.
     state_dir: Optional[str] = None
+    # "threaded" (default): a ControlPlaneRuntime's informer threads
+    # converge resizes *while training steps execute* — a node failure
+    # handled on the trainer's bus thread races live reconciliation and
+    # still lands on the edited spec (level-triggered). "inline" keeps
+    # the blocking reference arm.
+    reconcile_mode: str = "threaded"
     events: List[str] = field(default_factory=list)
 
     CLAIM = "elastic-train"
     WORKLOAD = "elastic-train-job"
 
     def __post_init__(self) -> None:
+        if self.reconcile_mode not in ("threaded", "inline"):
+            raise ValueError(
+                f"unknown reconcile_mode {self.reconcile_mode!r} "
+                f"(expected 'threaded' or 'inline')")
         self.plane = ControlPlane.open(self.state_dir, self.registry,
                                        self.cluster,
                                        announce=self.events.append)
+        if self.reconcile_mode == "threaded":
+            ControlPlaneRuntime(self.plane, name="elastic-informer").start()
+            self.events.append("informer runtime started")
         self.registry.bus.subscribe(Events.NODE_FAILED, self.on_node_failed,
                                     "elastic-controller")
         self.registry.bus.subscribe(Events.STRAGGLER_DETECTED,
                                     self.on_straggler, "elastic-controller")
+
+    def close(self) -> None:
+        """Stop the informer runtime (joins its threads, syncs the WAL)."""
+        if self.plane.informer is not None:
+            self.plane.informer.stop()
 
     # -- declarative state ---------------------------------------------------
     @property
@@ -100,24 +118,29 @@ class ElasticController:
                    and pool.owner(d.id) in (None, mine))
 
     def plan_mesh(self, n_chips: Optional[int] = None) -> core.MeshPlan:
-        n = n_chips or self._available_chips()
-        data, model = largest_mesh_shape(n, self.model_axis)
-        n = data * model
-        axes = [core.AxisSpec("data", data, "y"),
-                core.AxisSpec("model", model, "x")]
-        store = self.plane.store
-        if store.try_get("ResourceClaim", self.CLAIM) is None:
-            self.plane.submit(self.plane.planner.make_claim(self.CLAIM, n))
-            self.plane.submit(
-                Workload(claim=self.CLAIM, axes=axes,
-                         placement=self.placement, build_mesh=False),
-                name=self.WORKLOAD)
-        else:
-            # elastic resize IS a spec edit; reconcilers do the rest
-            self.plane.edit("ResourceClaim", self.CLAIM,
-                            lambda c: setattr(c.spec.requests[0], "count", n))
-            self.plane.edit("Workload", self.WORKLOAD,
-                            lambda w: setattr(w, "axes", axes))
+        # size + spec edits under the reconcile lock so a concurrently
+        # healing informer worker never interleaves between our read of
+        # the surviving pool and the resize edit that depends on it
+        with self.plane.mutate():
+            n = n_chips or self._available_chips()
+            data, model = largest_mesh_shape(n, self.model_axis)
+            n = data * model
+            axes = [core.AxisSpec("data", data, "y"),
+                    core.AxisSpec("model", model, "x")]
+            store = self.plane.store
+            if store.try_get("ResourceClaim", self.CLAIM) is None:
+                self.plane.submit(self.plane.planner.make_claim(self.CLAIM, n))
+                self.plane.submit(
+                    Workload(claim=self.CLAIM, axes=axes,
+                             placement=self.placement, build_mesh=False),
+                    name=self.WORKLOAD)
+            else:
+                # elastic resize IS a spec edit; reconcilers do the rest
+                self.plane.edit("ResourceClaim", self.CLAIM,
+                                lambda c: setattr(c.spec.requests[0],
+                                                  "count", n))
+                self.plane.edit("Workload", self.WORKLOAD,
+                                lambda w: setattr(w, "axes", axes))
         self.plane.wait_for("Workload", self.WORKLOAD)
         self.events.append(f"planned {data}x{model}")
         return self.plan
@@ -128,7 +151,10 @@ class ElasticController:
         self.events.append(f"node_failed {node}")
         # withdraw the node's slices; the reconcilers see the lost
         # devices + the shrunk spec and converge on a survivor mesh
-        self.registry.pool.withdraw_node(node)
+        # (under the reconcile lock: informer workers must not observe a
+        # half-withdrawn pool)
+        with self.plane.mutate():
+            self.registry.pool.withdraw_node(node)
         plan = self.plan_mesh()
         self.registry.bus.publish(Events.JOB_RESUMED,
                                   plan=plan, reason=f"lost {node}")

@@ -19,16 +19,22 @@ import time
 
 
 def provision_replicas(slots: int, chips_per_replica: int,
-                       state_dir: str = None):
+                       state_dir: str = None, reconcile_mode: str = "threaded"):
     """Declarative serve replica set -> (plane, workload ApiObject).
 
     With ``state_dir``, an existing WAL is recovered first: the stamped
     replica claims are adopted with their allocations intact and the
     workload only converges on a *delta* (e.g. a changed ``slots``) —
     the restart-safe serving story of the durable control plane.
+
+    ``reconcile_mode="threaded"`` (default) starts a
+    :class:`~repro.api.runtime.ControlPlaneRuntime` whose informer
+    threads keep reconciling while the serve engine runs — a replica
+    resize converges *under* the decode loop. The runtime is left
+    running on ``plane.informer``; the caller stops it.
     """
     from .. import core
-    from ..api import ControlPlane, Workload
+    from ..api import ControlPlane, ControlPlaneRuntime, Workload
     from ..topology.tpu import TpuPodSpec, build_tpu_cluster
 
     need = slots * chips_per_replica
@@ -37,6 +43,8 @@ def provision_replicas(slots: int, chips_per_replica: int,
     reg = core.DriverRegistry()
     reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
     plane = ControlPlane.open(state_dir, reg, cluster)
+    if reconcile_mode == "threaded":
+        ControlPlaneRuntime(plane).start()   # reachable as plane.informer
 
     if plane.store.try_get("ResourceClaimTemplate", "serve-replica") is None:
         plane.submit(core.ResourceClaimTemplate(
@@ -76,12 +84,19 @@ def main() -> None:
     ap.add_argument("--state-dir", default=None,
                     help="control-plane state directory; recovered replica "
                          "claims are adopted instead of re-stamped")
+    ap.add_argument("--reconcile-mode", default="threaded",
+                    choices=["threaded", "inline"],
+                    help="threaded: informer runtime converges replica "
+                         "sets while the engine decodes (default); "
+                         "inline: blocking reference arm")
     args = ap.parse_args()
 
     knd = None
+    plane = None
     if args.claim_chips > 0:
         plane, wl = provision_replicas(args.slots, args.claim_chips,
-                                       state_dir=args.state_dir)
+                                       state_dir=args.state_dir,
+                                       reconcile_mode=args.reconcile_mode)
         lat = wl.status.outputs["phase_latency_s"]
         claims = wl.status.outputs["claims"]
         print(f"[knd] serve replica set Ready: {len(claims)} claims "
@@ -119,6 +134,10 @@ def main() -> None:
     }
     if knd is not None:
         out["knd"] = knd
+    if plane is not None and plane.informer is not None:
+        stats = plane.informer.stop()       # informers ran under the engine
+        out["knd"]["informer"] = {"reconciled": stats.reconciled,
+                                  "rounds": stats.informer_rounds}
     print(json.dumps(out, indent=1))
 
 

@@ -43,6 +43,12 @@ def main() -> None:
     ap.add_argument("--placement", default="aligned",
                     choices=["aligned", "unaligned"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--reconcile-mode", default="threaded",
+                    choices=["threaded", "inline"],
+                    help="threaded: background informer runtime keeps "
+                         "converging while training steps execute "
+                         "(default); inline: blocking reconcile() "
+                         "reference arm")
     args = ap.parse_args()
 
     if args.devices:
@@ -69,9 +75,11 @@ def main() -> None:
     rules = None
     plan = None
     plane = None
+    informer = None
     if args.mesh:
         from .. import core
-        from ..api import ControlPlane, Workload, has_state, load_store
+        from ..api import (ControlPlane, ControlPlaneRuntime, Workload,
+                           has_state, load_store)
         from ..topology.tpu import TpuPodSpec, build_tpu_cluster
         d, m = (int(x) for x in args.mesh.split("x"))
         # declarative KND workflow on a pod big enough for the grid:
@@ -95,6 +103,11 @@ def main() -> None:
             # kill-and-resume: an existing state dir is recovered and
             # its in-flight workload adopted
             plane = ControlPlane.open(args.state_dir, reg, cluster)
+        if args.reconcile_mode == "threaded":
+            # submit-and-wait against a *running* runtime: the informer
+            # threads keep reconciling (and WAL-journaling) while the
+            # training steps below execute
+            informer = ControlPlaneRuntime(plane).start()
         # declarative spec reconciliation: a recovered run with changed
         # CLI flags converges onto the new intent as spec edits instead
         # of silently keeping the adopted mesh
@@ -141,6 +154,12 @@ def main() -> None:
         t0 = time.time()
         out = trainer.fit(args.steps)
         dt = time.time() - t0
+
+    if informer is not None:
+        stats = informer.stop()
+        print(f"[knd] informer runtime stopped after training: "
+              f"{stats.reconciled} reconciles over "
+              f"{stats.informer_rounds} rounds, {stats.panics} panics")
 
     losses = [h["loss"] for h in trainer.history]
     print(json.dumps({

@@ -1,0 +1,299 @@
+"""Chaos-test utilities for the threaded control plane.
+
+Building blocks for ``tests/test_runtime.py``'s randomized concurrency
+stress (and any future chaos test):
+
+* :func:`watchdog` — a deadlock guard around a code block: if the block
+  does not finish in time, every thread's stack is dumped via
+  ``faulthandler`` and the process hard-exits. A deadlocked informer
+  fails fast with a stack trace instead of hanging the gate.
+* :func:`run_stress` — the scenario driver: N submitter threads churn
+  claims + workloads against a running
+  :class:`~repro.api.runtime.ControlPlaneRuntime` with a seeded
+  :class:`~repro.api.chaos.FaultInjector` installed (delays at
+  store/workqueue/journal sync points, worker kills). Returns a
+  :class:`StressResult` snapshot of the converged world.
+* :func:`assert_pool_consistent` — allocation validity invariants: every
+  allocated device exists, is owned by exactly the claim that references
+  it, and no device is double-booked.
+* :func:`oracle_outcomes` — replays the surviving declarative intent on
+  a fresh *single-threaded* plane (inline reconcile, no faults) and
+  returns the same outcome shape, so the stress test can assert the
+  threaded run landed where the blocking oracle lands.
+
+Equivalence here is *outcome* equivalence — which claims are Allocated,
+how many devices each holds, how many replicas a template workload
+stamped — not byte-identical device ids: thread interleaving legitimately
+permutes which free device a claim grabs first, while satisfiability and
+cardinality must not depend on the schedule.
+"""
+
+from __future__ import annotations
+
+import faulthandler
+import os
+import random
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.api import (ControlPlane, ControlPlaneRuntime, FaultInjector,
+                       Workload, CONDITION_ALLOCATED, CONDITION_READY)
+from repro.api import chaos as chaos_hooks
+from repro.core import ClaimSpec, DeviceRequest, ResourceClaimTemplate
+
+from conftest import chip_claim, make_tpu_plane
+
+__all__ = ["watchdog", "run_stress", "oracle_outcomes",
+           "assert_pool_consistent", "StressResult", "DeadlockError"]
+
+
+class DeadlockError(AssertionError):
+    """Convergence did not arrive inside the watchdog budget."""
+
+
+def _rearm_global_guard() -> None:
+    budget = os.environ.get("PYTEST_GLOBAL_TIMEOUT")
+    if budget:
+        faulthandler.dump_traceback_later(float(budget), exit=True)
+
+
+@contextmanager
+def watchdog(seconds: float, note: str = ""):
+    """Hard deadlock guard: past ``seconds``, dump all stacks and exit.
+
+    ``faulthandler`` fires from a C-level watchdog thread, so it
+    triggers even when every Python thread is blocked on a lock — the
+    one failure mode a pytest-level timeout cannot report. The process
+    exits non-zero, which is exactly what a CI gate should see for a
+    deadlock. Re-arms the suite-wide PYTEST_GLOBAL_TIMEOUT guard (they
+    share the single faulthandler timer).
+    """
+    if note:
+        print(f"[watchdog] {seconds:.0f}s armed: {note}", flush=True)
+    faulthandler.dump_traceback_later(seconds, exit=True)
+    try:
+        yield
+    finally:
+        faulthandler.cancel_dump_traceback_later()
+        _rearm_global_guard()
+
+
+# ---------------------------------------------------------------------------
+# Outcome snapshots
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StressResult:
+    """The converged world, reduced to schedule-independent facts."""
+
+    seed: int
+    # claim name -> (requested count, allocated count or None)
+    claims: Dict[str, Tuple[int, Optional[int]]] = field(default_factory=dict)
+    # workload name -> Ready
+    workloads: Dict[str, bool] = field(default_factory=dict)
+    replicas_stamped: int = 0          # template-owned claims
+    injector: Optional[dict] = None
+    stats: Optional[object] = None
+
+    def outcome(self) -> Tuple:
+        """The comparable core (oracle equivalence)."""
+        return (dict(sorted(self.claims.items())),
+                dict(sorted(self.workloads.items())),
+                self.replicas_stamped)
+
+
+def snapshot(plane: ControlPlane, seed: int = -1) -> StressResult:
+    res = StressResult(seed=seed)
+    for obj in plane.store.list_objects("ResourceClaim"):
+        if obj.meta.labels.get("workload"):
+            res.replicas_stamped += 1
+            continue                    # counter-suffixed names: count only
+        claim = obj.spec
+        allocated = (len(claim.allocation.devices)
+                     if claim.allocated
+                     and obj.is_true(CONDITION_ALLOCATED, current=True)
+                     else None)
+        res.claims[obj.meta.name] = (claim.spec.requests[0].count, allocated)
+    for obj in plane.store.list_objects("Workload"):
+        res.workloads[obj.meta.name] = obj.is_true(CONDITION_READY,
+                                                   current=True)
+    return res
+
+
+def assert_pool_consistent(plane: ControlPlane) -> None:
+    """No double-booking; claim allocations and pool bookkeeping agree."""
+    pool = plane.registry.pool
+    owned_by: Dict[str, str] = {}
+    for obj in plane.store.list_objects("ResourceClaim"):
+        claim = obj.spec
+        if not claim.allocated:
+            continue
+        for a in claim.allocation.devices:
+            dev = pool.get(a.ref.id)
+            assert dev is not None, \
+                f"{obj.meta.name} holds vanished device {a.ref.id}"
+            assert a.ref.id not in owned_by, \
+                (f"device {a.ref.id} double-booked by {obj.meta.name} "
+                 f"and {owned_by[a.ref.id]}")
+            owned_by[a.ref.id] = obj.meta.name
+            assert pool.owner(a.ref.id) == claim.uid, \
+                (f"pool owner of {a.ref.id} is {pool.owner(a.ref.id)!r}, "
+                 f"claim {obj.meta.name} thinks it owns it")
+    # no orphaned pool allocations either (a claim the store forgot)
+    live_uids = {o.spec.uid
+                 for o in plane.store.list_objects("ResourceClaim")}
+    for dev_id, uid in list(pool._allocated.items()):
+        assert uid in live_uids, \
+            f"pool device {dev_id} allocated to dead claim uid {uid}"
+
+
+# ---------------------------------------------------------------------------
+# The stress scenario
+# ---------------------------------------------------------------------------
+
+def _scenario_ops(seed: int, thread: int, n_claims: int) -> List[Tuple]:
+    """Deterministic per-thread op list (schedule stays OS-owned)."""
+    rng = random.Random((seed << 8) | thread)
+    ops: List[Tuple] = []
+    for i in range(n_claims):
+        name = f"c-{thread}-{i}"
+        ops.append(("submit", name, rng.choice((1, 1, 2))))
+        if rng.random() < 0.35:
+            ops.append(("workload", f"w-{thread}-{i}", name))
+        elif rng.random() < 0.3 and i > 0:
+            # only claims without a workload get deleted, so workload
+            # readiness stays a schedule-independent fact
+            prev = f"c-{thread}-{i - 1}"
+            if ("workload", f"w-{thread}-{i - 1}", prev) not in ops:
+                ops.append(("delete", prev))
+        if rng.random() < 0.3:
+            ops.append(("sleep", rng.uniform(0.0, 0.002)))
+    return ops
+
+
+def surviving_intent(seed: int, n_threads: int, n_claims: int
+                     ) -> Tuple[Dict[str, int], Dict[str, str], List[int]]:
+    """Fold every thread's op list into the final declarative intent:
+    claim name -> count, workload name -> claim, template replica sizes."""
+    claims: Dict[str, int] = {}
+    workloads: Dict[str, str] = {}
+    for t in range(n_threads):
+        for op in _scenario_ops(seed, t, n_claims):
+            if op[0] == "submit":
+                claims[op[1]] = op[2]
+            elif op[0] == "delete":
+                claims.pop(op[1], None)
+            elif op[0] == "workload":
+                workloads[op[1]] = op[2]
+    replicas = [1 + (seed + k) % 3 for k in range(3)]   # resize sequence
+    return claims, workloads, replicas
+
+
+def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
+               side: int = 10, kill_prob: float = 0.15, max_kills: int = 6,
+               delay_prob: float = 0.08, max_delay_s: float = 0.002,
+               state_dir: Optional[str] = None,
+               quiesce_timeout: float = 90.0,
+               deadline_s: float = 150.0) -> Tuple[StressResult, ControlPlane]:
+    """Drive the randomized concurrent scenario; return (result, plane).
+
+    The plane is returned *stopped* (runtime joined, journal synced) so
+    callers can run invariants and WAL recovery checks against it.
+
+    Sizing invariant: the worst-case concurrent load (every claim of
+    every thread live at once, before its delete lands, plus template
+    replicas) must fit the pool — ``4×8×2 + 3 = 67 ≤ 100`` chips on the
+    default 10×10 pod. That is what makes the converged outcome
+    schedule-independent and the oracle comparison exact: with enough
+    capacity, *which* claims allocate never depends on thread order.
+    """
+    plane = make_tpu_plane(side=side, state_dir=state_dir)
+    injector = FaultInjector(seed=seed, delay_prob=delay_prob,
+                             max_delay_s=max_delay_s, kill_prob=kill_prob,
+                             max_kills=max_kills)
+    errors: List[BaseException] = []
+
+    def submitter(t: int) -> None:
+        try:
+            rt = plane.informer
+            for op in _scenario_ops(seed, t, n_claims):
+                if op[0] == "submit":
+                    rt.submit(chip_claim(op[1], op[2]))
+                elif op[0] == "delete":
+                    rt.delete_claim(op[1])
+                elif op[0] == "workload":
+                    rt.submit(Workload(claim=op[2], build_mesh=False),
+                              name=op[1])
+                elif op[0] == "sleep":
+                    threading.Event().wait(op[1])
+        except BaseException as e:  # noqa: BLE001 - surfaced by the test
+            errors.append(e)
+
+    def template_churner() -> None:
+        """One thread exercises the replica-set stamp/delete path."""
+        try:
+            rt = plane.informer
+            rt.submit(ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+                requests=[DeviceRequest(name="chips",
+                                        device_class="tpu.google.com",
+                                        count=1)],
+                topology_scope="cluster")))
+            rt.submit(Workload(claim_template="rep", role="serve",
+                               replicas=1), name="serve")
+            for replicas in surviving_intent(seed, 0, 0)[2]:
+                rt.edit("Workload", "serve",
+                        lambda w, r=replicas: setattr(w, "replicas", r))
+                threading.Event().wait(0.002)
+        except BaseException as e:  # noqa: BLE001
+            errors.append(e)
+
+    with watchdog(deadline_s, note=f"stress seed={seed}"):
+        with chaos_hooks.installed(injector):
+            with ControlPlaneRuntime(plane, workers_per_kind=2,
+                                     max_worker_restarts=4 * max_kills,
+                                     poll_interval_s=0.005) as rt:
+                threads = [threading.Thread(target=submitter, args=(t,),
+                                            name=f"submitter-{t}")
+                           for t in range(n_threads)]
+                threads.append(threading.Thread(target=template_churner,
+                                                name="template-churner"))
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                if errors:
+                    raise errors[0]
+                if not rt.wait_quiesce(quiesce_timeout):
+                    with rt.lock:        # snapshot vs live worker writes
+                        queue_state = repr(plane.queue)
+                    raise DeadlockError(
+                        f"stress seed={seed}: no quiescence within "
+                        f"{quiesce_timeout}s: queue={queue_state}, "
+                        f"stats={rt.stats}")
+                result = snapshot(plane, seed)
+                result.injector = injector.summary()
+                result.stats = rt.stats
+    return result, plane
+
+
+def oracle_outcomes(seed: int, *, n_threads: int = 4, n_claims: int = 8,
+                    side: int = 10) -> StressResult:
+    """The single-threaded oracle: apply the scenario's surviving intent
+    to a fresh plane with blocking inline reconcile and no faults."""
+    plane = make_tpu_plane(side=side, reconcile_mode="inline")
+    claims, workloads, replicas = surviving_intent(seed, n_threads, n_claims)
+    for name in sorted(claims):
+        plane.submit(chip_claim(name, claims[name]))
+    for wname in sorted(workloads):
+        plane.submit(Workload(claim=workloads[wname], build_mesh=False),
+                     name=wname)
+    plane.submit(ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips",
+                                device_class="tpu.google.com", count=1)],
+        topology_scope="cluster")))
+    plane.submit(Workload(claim_template="rep", role="serve",
+                          replicas=replicas[-1]), name="serve")
+    plane.reconcile()
+    return snapshot(plane, seed)

@@ -19,57 +19,10 @@ from repro.core.attributes import AttributeSet
 from repro.core.claims import DeviceClass, MatchAttribute
 from repro.core.resources import Device, ResourcePool, ResourceSlice
 
-RACKS = ("r0", "r1", "r2")
-MODELS = ("m-a", "m-b")
-
-
-def build_inventory(rng: random.Random):
-    """A randomized but reproducible pool + classes (same seed == same world)."""
-    pool = ResourcePool()
-    n_nodes = rng.randint(2, 5)
-    for n in range(n_nodes):
-        node = f"node-{n}"
-        sl = ResourceSlice(driver="drv", pool=f"p{n % 2}", node=node)
-        for i in range(rng.randint(2, 7)):
-            attrs = {
-                "drv/rack": rng.choice(RACKS),
-                "drv/model": rng.choice(MODELS),
-                "drv/index": i,
-            }
-            if rng.random() < 0.8:          # sometimes absent -> constraint fail
-                attrs["drv/pciRoot"] = f"pci{rng.randint(0, 2)}"
-            sl.add(Device(name=f"d{n}-{i}", attributes=AttributeSet.of(attrs)))
-        pool.publish(sl)
-    classes = {
-        "any": DeviceClass("any", selectors=['device.driver == "drv"']),
-        "model-a": DeviceClass("model-a", selectors=[
-            'device.attributes["model"] == "m-a"']),
-    }
-    return pool, classes
-
-
-def build_claims(rng: random.Random, n_claims: int):
-    claims = []
-    for c in range(n_claims):
-        n_reqs = rng.randint(1, 2)
-        reqs = []
-        for r in range(n_reqs):
-            sel = []
-            if rng.random() < 0.4:
-                sel.append(f'device.attributes["index"] >= {rng.randint(0, 2)}')
-            reqs.append(DeviceRequest(
-                name=f"req{r}", device_class=rng.choice(["any", "model-a"]),
-                selectors=sel, count=rng.randint(1, 3)))
-        constraints = []
-        if rng.random() < 0.5:
-            constraints.append(MatchAttribute(
-                attribute=rng.choice(["rack", "pciRoot"]),
-                requests=[r.name for r in reqs if rng.random() < 0.8]))
-        claims.append(ResourceClaim(
-            name=f"claim-{c}",
-            spec=ClaimSpec(requests=reqs, constraints=constraints,
-                           topology_scope=rng.choice(["node", "cluster"]))))
-    return claims
+# randomized world builders live in the shared cluster fixture module
+# (tests/conftest.py) — the chaos stress harness reuses them
+from conftest import random_claims as build_claims, \
+    random_inventory as build_inventory
 
 
 def run_sequence(seed: int, naive: bool):

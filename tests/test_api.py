@@ -11,26 +11,12 @@ from repro.api import (ApiError, ApiStore, ConflictError, ControlPlane,
                        Workload, CONDITION_ALLOCATED, CONDITION_ATTACHED,
                        CONDITION_PREPARED, CONDITION_READY, Condition, TRUE,
                        FALSE)
-from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, DriverRegistry,
-                        IciDriver, ResourceClaim, ResourceClaimTemplate,
-                        TpuDriver)
+from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, IciDriver,
+                        ResourceClaimTemplate)
 from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
 
-
-def make_plane(side=4):
-    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
-    reg = DriverRegistry()
-    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
-    plane = ControlPlane(reg, cluster)
-    plane.run_discovery()
-    return plane
-
-
-def chip_claim(name, count):
-    return ResourceClaim(name=name, spec=ClaimSpec(
-        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
-                                count=count)],
-        topology_scope="cluster"))
+# the shared cluster fixture machinery (tests/conftest.py)
+from conftest import chip_claim, make_tpu_plane as make_plane
 
 
 # ---------------------------------------------------------------------------

@@ -17,7 +17,11 @@ def make_controller(side=4, model_axis=4):
     reg = DriverRegistry()
     reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
     reg.run_discovery()
-    return ElasticController(cluster, reg, model_axis=model_axis)
+    # inline: unit tests should not each leak an informer thread pool for
+    # the rest of the pytest process; the threaded arm is exercised by
+    # the e2e subprocess below and by tests/test_runtime.py
+    return ElasticController(cluster, reg, model_axis=model_axis,
+                             reconcile_mode="inline")
 
 
 class TestLargestMeshShape:
@@ -138,6 +142,7 @@ with tempfile.TemporaryDirectory() as d:
         assert step == 3, step
         out2 = t2.fit(3)
     assert out2["completed"] >= 6
+ctl.close()   # stop the informer runtime (joins threads, syncs WAL)
 print("ELASTIC_E2E_OK")
 """
 

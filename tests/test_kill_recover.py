@@ -1,0 +1,36 @@
+"""Kill-and-recover as a tier-1 test: SIGKILL a churning journaled
+control plane, recover, assert byte-identical adoption.
+
+The implementation lives in ``scripts/kill_recover_smoke.py`` (also the
+standalone CI entry point) — this wrapper makes CI and tier-1 share one
+implementation instead of the old script-only gate. Subprocess + real
+SIGKILL, so it is marked ``slow``; skip with ``-m "not slow"``.
+"""
+
+import importlib.util
+import os
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                       "kill_recover_smoke.py")
+
+
+def _load_smoke():
+    spec = importlib.util.spec_from_file_location("kill_recover_smoke",
+                                                  os.path.abspath(_SCRIPT))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["kill_recover_smoke"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_sigkill_mid_churn_then_byte_identical_adoption():
+    """Child journals claim churn; parent SIGKILLs it mid-round, recovers
+    the WAL into a fresh registry and asserts zero re-allocations (the
+    asserts live in the shared implementation)."""
+    smoke = _load_smoke()
+    assert smoke.parent() == 0

@@ -29,27 +29,13 @@ from repro.api import (AdmissionError, ApiStore, Condition, ControlPlane,
 from repro.api.persistence import (StoreJournal, Unpersisted, WriteAheadLog,
                                    decode, dump_api_object, dump_store,
                                    encode, load_api_object, load_store)
-from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, DriverRegistry,
-                        IciDriver, MatchAttribute, ResourceClaim,
-                        ResourceClaimTemplate, TpuDriver)
+from repro.core import (AxisSpec, ClaimSpec, DeviceRequest, MatchAttribute,
+                        ResourceClaim, ResourceClaimTemplate)
 from repro.core.claims import DeviceConfig
-from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
 
-
-def make_plane(side=4, **kwargs):
-    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
-    reg = DriverRegistry()
-    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
-    plane = ControlPlane(reg, cluster, **kwargs)
-    plane.run_discovery()
-    return plane
-
-
-def chip_claim(name, count, selectors=()):
-    return ResourceClaim(name=name, spec=ClaimSpec(
-        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
-                                selectors=list(selectors), count=count)],
-        topology_scope="cluster"))
+# the shared cluster fixture machinery (tests/conftest.py)
+from conftest import chip_claim, make_tpu_plane as make_plane, \
+    make_tpu_registry
 
 
 # ---------------------------------------------------------------------------
@@ -290,10 +276,7 @@ class TestJournalRecovery:
 
 
 def _fresh_registry(side=4):
-    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
-    reg = DriverRegistry()
-    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
-    return reg
+    return make_tpu_registry(side)[1]
 
 
 # ---------------------------------------------------------------------------
@@ -342,9 +325,7 @@ class TestAdoption:
         plane = self._crashed_plane(tmp_path)
         ready_before = plane.store.get("Workload", "job") \
             .condition(CONDITION_READY)
-        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
-        reg = DriverRegistry()
-        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        cluster, reg = make_tpu_registry()
         plane2 = ControlPlane.recover(str(tmp_path / "s"), reg, cluster,
                                       resume_journal=False)
         obj = plane2.store.get("Workload", "job")
@@ -361,9 +342,7 @@ class TestAdoption:
         re-plans deterministically without touching the allocation."""
         plane = self._crashed_plane(tmp_path)
         pre = allocation_records(plane.store)
-        cluster = build_tpu_cluster(1, TpuPodSpec(x=4, y=4))
-        reg = DriverRegistry()
-        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        cluster, reg = make_tpu_registry()
         store = load_store(dump_store(plane.store))
         obj = store.get("Workload", "job")
         assert isinstance(obj.status.outputs["plan"], Unpersisted)
@@ -378,9 +357,7 @@ class TestAdoption:
     def test_lost_devices_heal_through_allocation_controller(self, tmp_path):
         plane = self._crashed_plane(tmp_path, n_claims=2)
         # recover against a SMALLER cluster: some allocated chips vanished
-        small = build_tpu_cluster(1, TpuPodSpec(x=2, y=2))
-        reg = DriverRegistry()
-        reg.add(TpuDriver(small)).add(IciDriver(small))
+        small, reg = make_tpu_registry(side=2)
         plane2 = ControlPlane.recover(str(tmp_path / "s"), reg, small,
                                       resume_journal=False)
         assert plane2.adoption_stats["lost"] >= 1
@@ -389,6 +366,35 @@ class TestAdoption:
             cond = obj.condition(CONDITION_ALLOCATED)
             assert cond.true and cond.observed_generation == \
                 obj.meta.generation
+
+    def test_stale_template_counter_healed_from_owned_claims(self):
+        """Crash window: stamped claims can be durable while the
+        template's counter-touch is not (the touch flushes later).
+        adopt() must re-derive the counter from the claim names that
+        actually exist, or post-recovery stamps collide."""
+        import itertools
+
+        plane = make_plane()
+        plane.submit(ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+            requests=[DeviceRequest(name="chips",
+                                    device_class="tpu.google.com", count=2)],
+            topology_scope="cluster")))
+        plane.submit(Workload(claim_template="rep", replicas=2,
+                              role="serve"), name="srv")
+        plane.wait_for("Workload", "srv")
+        # simulate recovery off a WAL whose last template record predates
+        # the stamps: rewind the live counter to zero
+        tmpl = plane.store.get("ResourceClaimTemplate", "rep").spec
+        tmpl._counter = itertools.count(0)
+        plane2 = ControlPlane(plane.registry, store=plane.store,
+                              admission=False)
+        stats = plane2.adopt()
+        assert stats.get("counter_healed") == 1
+        plane2.edit("Workload", "srv", lambda w: setattr(w, "replicas", 3))
+        plane2.wait_for("Workload", "srv")   # no name collision
+        names = {o.meta.name for o in plane2.store.list_objects(
+            "ResourceClaim")}
+        assert len(names) == 3
 
     def test_template_stamping_continues_after_recovery(self, tmp_path):
         plane = make_plane(state_dir=str(tmp_path / "s"))
@@ -410,6 +416,88 @@ class TestAdoption:
             "ResourceClaim")}
         assert stamped < after                    # old replicas adopted
         assert len(after) == 3                    # +1 fresh, no collision
+
+
+# ---------------------------------------------------------------------------
+# Property: WAL replay determinism under interleaved journal writers
+# ---------------------------------------------------------------------------
+
+class TestWalReplayDeterminismProperty:
+    """Hypothesis sweep (importorskip-guarded, like test_cel.py): for ANY
+    interleaving of multiple writers' op streams into one journaled
+    store — including arbitrary flush points, tiny flush windows and
+    aggressive snapshot compaction — recovery replays to a store whose
+    dump is byte-identical to the live one.
+
+    The store lock serializes real threads, so every concurrent
+    schedule IS some interleaving of the writers' op streams; driving
+    the interleaving from hypothesis makes the search exhaustive-ish
+    *and* shrinkable, which racing actual threads never is (the
+    threaded arm lives in TestThreadSafety below and in the
+    tests/test_runtime.py chaos stress).
+    """
+
+    def test_interleaved_writers_replay_identically(self):
+        pytest.importorskip("hypothesis")
+        import tempfile
+
+        from hypothesis import given, settings, strategies as st
+
+        OPS = ("create", "recount", "condition", "delete", "flush")
+
+        @settings(max_examples=30, deadline=None)
+        @given(data=st.data())
+        def prop(data):
+            with tempfile.TemporaryDirectory() as d:
+                store = ApiStore()
+                journal = StoreJournal(
+                    store, os.path.join(d, "s"),
+                    flush_batch=data.draw(
+                        st.integers(1, 8), label="flush_batch"),
+                    snapshot_every=data.draw(
+                        st.sampled_from([8, 64, 4096]),
+                        label="snapshot_every"))
+                journal.attach()
+                # per-writer op scripts; the interleave order is drawn
+                n_writers = data.draw(st.integers(2, 3), label="writers")
+                scripts = {
+                    w: data.draw(st.lists(st.sampled_from(OPS),
+                                          min_size=4, max_size=12),
+                                 label=f"script{w}")
+                    for w in range(n_writers)}
+                created = {w: [] for w in range(n_writers)}
+                counters = {w: 0 for w in range(n_writers)}
+                while any(scripts.values()):
+                    w = data.draw(st.sampled_from(
+                        [w for w, s in scripts.items() if s]),
+                        label="next_writer")
+                    op = scripts[w].pop(0)
+                    if op == "create" or not created[w]:
+                        name = f"c-{w}-{counters[w]}"
+                        counters[w] += 1
+                        store.create(chip_claim(name, 1))
+                        created[w].append(name)
+                    elif op == "recount":
+                        store.update_spec(
+                            "ResourceClaim", created[w][-1],
+                            lambda c: setattr(c.spec.requests[0],
+                                              "count", 2))
+                    elif op == "condition":
+                        store.set_condition(
+                            "ResourceClaim", created[w][-1],
+                            Condition(CONDITION_ALLOCATED, TRUE,
+                                      reason=f"w{w}",
+                                      observed_generation=1))
+                    elif op == "delete":
+                        store.delete("ResourceClaim", created[w].pop())
+                    elif op == "flush":
+                        journal.flush()
+                journal.close()
+                recovered, _ = recover_store(os.path.join(d, "s"))
+                assert store_dump_json(recovered) == store_dump_json(store)
+                assert recovered.resource_version == store.resource_version
+
+        prop()
 
 
 # ---------------------------------------------------------------------------

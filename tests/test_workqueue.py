@@ -5,25 +5,10 @@ import pytest
 from repro.api import (ControlPlane, Workload, WorkQueue,
                        CONDITION_ALLOCATED, CONDITION_READY)
 from repro.api.controllers import Controller
-from repro.core import (ClaimSpec, DeviceRequest, DriverRegistry, IciDriver,
-                        ResourceClaim, TpuDriver)
 from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
 
-
-def make_plane(side=4, **kwargs):
-    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
-    reg = DriverRegistry()
-    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
-    plane = ControlPlane(reg, cluster, **kwargs)
-    plane.run_discovery()
-    return plane
-
-
-def chip_claim(name, count):
-    return ResourceClaim(name=name, spec=ClaimSpec(
-        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
-                                count=count)],
-        topology_scope="cluster"))
+# the shared cluster fixture machinery (tests/conftest.py)
+from conftest import chip_claim, make_tpu_plane as make_plane
 
 
 # ---------------------------------------------------------------------------
