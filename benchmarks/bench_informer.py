@@ -182,6 +182,9 @@ def run(smoke: bool = False) -> Dict[str, object]:
         threaded.gate.set()
         thr_t += _measure_block(step, x, block, warmup)
         threaded.gate.clear()
+    # operational snapshot BEFORE stop(): per-kind queue depth, backoff
+    # counts, requeue rate (ControlPlaneRuntime.stats() telemetry)
+    telemetry = threaded.runtime.stats()
     stats = threaded.close()
 
     def ms(ts):
@@ -199,6 +202,7 @@ def run(smoke: bool = False) -> Dict[str, object]:
         "blocking_overhead_pct": round(
             (inline_ms - base_ms) / base_ms * 100, 2),
         "threaded_reconciles": stats.reconciled,
+        "workqueue_telemetry": telemetry["workqueue"],
     }
 
 

@@ -1,0 +1,189 @@
+"""Node-plane scheduler bench: placement cost, quality, and recovery.
+
+Three sections:
+
+* **throughput** — claims scheduled+allocated per second with the node
+  plane on (SchedulerController placing every claim) vs the bare plane
+  (no Node objects, scheduler inert): what a placement decision costs.
+* **quality** — the acceptance metric: predicted all-reduce time of the
+  scheduler's torus-neighborhood placement vs random node sets of the
+  same size (the device-plugin lottery at node granularity). Aligned
+  must beat the random mean.
+* **recovery** — node-death -> Ready latency: a threaded runtime + real
+  heartbeat agents; kill the node hosting a live workload's claim and
+  time the kill -> evict -> reschedule -> Ready=True pipeline.
+
+  PYTHONPATH=src python -m benchmarks.bench_scheduler [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import statistics
+import time
+from typing import Dict, List, Optional
+
+
+def _chip_claim(name: str, count: int = 1):
+    from repro.core import ClaimSpec, DeviceRequest, ResourceClaim
+    return ResourceClaim(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips", device_class="tpu.google.com",
+                                count=count)],
+        topology_scope="cluster"))
+
+
+def _plane(side: int, node_plane: bool):
+    from repro.api import ControlPlane
+    from repro.core import DriverRegistry, IciDriver, TpuDriver
+    from repro.node import NodePlane
+    from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster, reconcile_mode="inline")
+    nplane = None
+    if node_plane:
+        # threadless agents + a frozen clock: leases never lapse, so the
+        # bench measures scheduling, not heartbeat churn
+        plane.node_clock = lambda: 1000.0
+        nplane = NodePlane(plane).start(start_threads=False)
+    else:
+        plane.run_discovery()
+    plane.reconcile()
+    return plane, nplane
+
+
+def bench_throughput(side: int, n_claims: int) -> Dict[str, object]:
+    """Drip claims one at a time (reconcile each) with/without placement."""
+    out: Dict[str, object] = {}
+    for arm, node_plane in (("scheduled", True), ("bare", False)):
+        plane, _ = _plane(side, node_plane)
+        t0 = time.perf_counter()
+        for i in range(n_claims):
+            plane.submit(_chip_claim(f"c{i}", 1 + (i % 2)))
+            plane.reconcile()
+        dt = time.perf_counter() - t0
+        allocated = sum(
+            1 for o in plane.store.list_objects("ResourceClaim")
+            if o.spec.allocated)
+        assert allocated == n_claims, (arm, allocated)
+        out[arm] = {"claims_per_s": round(n_claims / dt, 1),
+                    "us_per_claim": round(dt / n_claims * 1e6, 1)}
+    out["placement_overhead_pct"] = round(
+        (out["scheduled"]["us_per_claim"] / out["bare"]["us_per_claim"] - 1)
+        * 100, 1)
+    return out
+
+
+def bench_quality(side: int, n_chips: int,
+                  trials: int = 32) -> Dict[str, object]:
+    """Scheduler neighborhood vs random node sets: predicted all-reduce."""
+    from repro.node.scheduler import (SchedulerContext,
+                                      predicted_collective_seconds,
+                                      SchedulerController)
+    plane, _ = _plane(side, node_plane=True)
+    sched = next(c for c in plane.controllers
+                 if isinstance(c, SchedulerController))
+    claim = _chip_claim("probe", n_chips)
+    infos = sched._node_infos(plane, claim)
+    ctx = SchedulerContext(plane=plane, obj=None, claim=claim,
+                           needs={"chips": n_chips})
+    chosen = sched._set_picker.grow(ctx, infos)
+    t_aligned = predicted_collective_seconds(plane, chosen, n_chips)
+    rng = random.Random(0)
+    by_name = {i.name: i for i in infos}
+    names = sorted(by_name)
+    t_random: List[float] = []
+    for _ in range(trials):
+        subset = [by_name[n] for n in rng.sample(names, len(chosen))]
+        t_random.append(predicted_collective_seconds(plane, subset, n_chips))
+    mean_rand = statistics.mean(t_random)
+    return {
+        "n_chips": n_chips, "hosts_chosen": len(chosen),
+        "aligned_ms": round(t_aligned * 1e3, 4),
+        "random_mean_ms": round(mean_rand * 1e3, 4),
+        "random_min_ms": round(min(t_random) * 1e3, 4),
+        "speedup_vs_random": round(mean_rand / t_aligned, 2),
+        "aligned_beats_random": bool(t_aligned < mean_rand),
+    }
+
+
+def bench_recovery(side: int, n_chips: int,
+                   reps: int = 3) -> Dict[str, object]:
+    """Kill the node under a live workload; time kill -> Ready again."""
+    from repro.api import (ControlPlane, ControlPlaneRuntime, Workload,
+                          CONDITION_READY)
+    from repro.core import DriverRegistry, IciDriver, TpuDriver
+    from repro.node import NodePlane
+    from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+
+    latencies = []
+    lease_s = 0.25
+    for rep in range(reps):
+        cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+        reg = DriverRegistry()
+        reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+        plane = ControlPlane(reg, cluster)
+        nplane = NodePlane(plane, heartbeat_s=0.05,
+                           lease_duration_s=lease_s).start()
+        with ControlPlaneRuntime(plane, poll_interval_s=0.005) as rt:
+            rt.submit(_chip_claim("train", n_chips))
+            rt.submit(Workload(claim="train", build_mesh=False), name="job")
+            rt.wait_ready("Workload", "job", timeout=60)
+            cobj = plane.store.get("ResourceClaim", "train")
+            victim = sorted({a.ref.node
+                             for a in cobj.spec.allocation.devices})[0]
+            t0 = time.perf_counter()
+            nplane.kill(victim)
+            deadline = time.monotonic() + 60
+            while time.monotonic() < deadline:
+                cobj = plane.store.get("ResourceClaim", "train")
+                wobj = plane.store.get("Workload", "job")
+                if (cobj.spec.allocated
+                        and victim not in {a.ref.node for a in
+                                           cobj.spec.allocation.devices}
+                        and wobj.is_true(CONDITION_READY, current=True)):
+                    latencies.append(time.perf_counter() - t0)
+                    break
+                time.sleep(0.005)
+            else:
+                raise RuntimeError(f"rep {rep}: no recovery within 60s")
+        nplane.stop()
+    return {
+        "reps": reps, "lease_duration_s": lease_s,
+        "kill_to_ready_ms": {
+            "median": round(statistics.median(latencies) * 1e3, 1),
+            "min": round(min(latencies) * 1e3, 1),
+            "max": round(max(latencies) * 1e3, 1),
+        },
+    }
+
+
+def run(smoke: bool = False) -> Dict[str, object]:
+    side = 8 if smoke else 16
+    n_claims = 24 if smoke else 128
+    n_chips = 16 if smoke else 64
+    return {
+        "bench": "scheduler",
+        "torus_side": side,
+        "throughput": bench_throughput(side, n_claims),
+        "quality": bench_quality(side, n_chips),
+        "recovery": bench_recovery(4 if smoke else 8, 8,
+                                   reps=2 if smoke else 3),
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes for the CI gate")
+    args = ap.parse_args(argv)
+    result = run(smoke=args.smoke)
+    print(json.dumps(result, indent=1))
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,9 @@ Framework perf:
                       adoption check)
   bench_informer   -> threaded informer overlap: step-time overhead of
                       background reconcile vs the blocking inline arm
+  bench_scheduler  -> node-plane scheduler: placement throughput,
+                      aligned-vs-random predicted all-reduce time,
+                      node-death -> Ready recovery latency
 
 The control-plane sections write ``BENCH_reconcile.json`` at the repo
 root — the perf trajectory CI and reviewers diff across PRs.
@@ -71,7 +74,7 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "recovery", "informer", "roofline", "kernels"]
+            "recovery", "informer", "scheduler", "roofline", "kernels"]
 
 
 def main() -> None:
@@ -111,6 +114,10 @@ def main() -> None:
         elif section == "informer":
             from . import bench_informer
             perf["informer"] = bench_informer.main(
+                ["--smoke"] if args.smoke else [])
+        elif section == "scheduler":
+            from . import bench_scheduler
+            perf["scheduler"] = bench_scheduler.main(
                 ["--smoke"] if args.smoke else [])
         elif section == "roofline":
             from . import bench_roofline

@@ -56,6 +56,30 @@ print("recovery:",
       "recover_ms@" + str(r["recovery"][-1]["claims"]), r["recovery"][-1]["recover_ms"])
 '
 
+echo "== smoke: node plane (agent kill mid-workload -> Ready again) =="
+# the node-plane acceptance scenario as a fast named gate: SIGKILL'd
+# agent -> lease expiry -> eviction -> reschedule -> workload Ready
+PYTEST_GLOBAL_TIMEOUT=300 python -m pytest -x -q \
+  tests/test_node_plane.py::TestNodeKillChaos
+
+echo "== smoke: scheduler bench (reduced sizes, merged into BENCH_reconcile.json) =="
+# placement cost + the acceptance metric (aligned beats random on
+# predicted all-reduce time) + node-death recovery latency; run via
+# benchmarks.run so the section lands in BENCH_reconcile.json
+python -m benchmarks.run --only scheduler --smoke \
+  | python -c '
+import json, re, sys
+blob = sys.stdin.read()
+r = json.loads(blob[blob.index("{"):blob.rindex("}") + 1])
+q = r["quality"]
+assert q["aligned_beats_random"], "scheduler placement lost to random"
+print("scheduler:",
+      "aligned", str(q["aligned_ms"]) + "ms vs random",
+      str(q["random_mean_ms"]) + "ms (" + str(q["speedup_vs_random"]) + "x),",
+      "placement", r["throughput"]["scheduled"]["us_per_claim"], "us/claim,",
+      "kill->Ready", str(r["recovery"]["kill_to_ready_ms"]["median"]) + "ms")
+'
+
 echo "== smoke: informer overlap bench (reduced sizes) =="
 # overlapped reconcile must stay cheaper than the blocking arm (with
 # noise slack) and must not explode outright; the tight (<=5%)

@@ -7,10 +7,11 @@ submit versioned objects (ResourceClaims, Workloads) to an
 scripts used to hand-sequence. See docs/API.md for the workflow.
 """
 
-from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus,
-                      Workload, TRUE, FALSE, UNKNOWN,
+from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
+                      ObjectStatus, Workload, TRUE, FALSE, UNKNOWN,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
-                      CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
+                      CONDITION_PREPARED, CONDITION_READY,
+                      CONDITION_SCHEDULED, PHASE_ORDER)
 from .store import (AdmissionError, ApiError, ApiStore, ConflictError, Watch,
                     WatchEvent, KIND_OF)
 from .controllers import (AllocationController, AttachmentController,
@@ -27,10 +28,10 @@ from .runtime import (ConditionWaiter, ControlPlaneRuntime, RuntimeStats,
                       TokenBucket)
 
 __all__ = [
-    "ApiObject", "Condition", "ObjectMeta", "ObjectStatus", "Workload",
-    "TRUE", "FALSE", "UNKNOWN",
+    "ApiObject", "Condition", "Lease", "Node", "ObjectMeta", "ObjectStatus",
+    "Workload", "TRUE", "FALSE", "UNKNOWN",
     "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
-    "CONDITION_READY", "PHASE_ORDER",
+    "CONDITION_READY", "CONDITION_SCHEDULED", "PHASE_ORDER",
     "AdmissionError", "ApiError", "ApiStore", "ConflictError", "Watch",
     "WatchEvent", "KIND_OF",
     "Controller", "AllocationController", "PrepareController",

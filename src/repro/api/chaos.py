@@ -39,6 +39,11 @@ Known sync points (prefix-matchable, e.g. ``"store."`` hits all three):
 ``runtime.informer.pump``     informer event-pump iteration
 ``runtime.worker.pop``        worker picked a key off its inbox (killable)
 ``runtime.worker.reconcile``  controllers about to run for a key (killable)
+``node.agent.publish``        node agent about to publish its slices
+``node.agent.heartbeat``      node agent lease renewal tick (killable —
+                              a kill here IS the SIGKILL'd-daemon
+                              scenario: heartbeats stop, the lease
+                              lapses, the node is evicted)
 ====================          =================================================
 """
 
@@ -59,6 +64,7 @@ SYNC_POINTS = (
     "journal.flush", "wal.append",
     "runtime.informer.pump", "runtime.worker.pop",
     "runtime.worker.reconcile",
+    "node.agent.publish", "node.agent.heartbeat",
 )
 
 

@@ -36,7 +36,8 @@ from ..core.oci import AttachmentSpec, MeshRuntime
 from ..core.planner import MeshPlanner
 from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
-                      CONDITION_PREPARED, CONDITION_READY, PHASE_ORDER)
+                      CONDITION_PREPARED, CONDITION_READY,
+                      CONDITION_SCHEDULED, PHASE_ORDER)
 from .store import AdmissionError, ApiStore, DELETED, WatchEvent
 from .workqueue import WorkQueue
 
@@ -52,6 +53,7 @@ __all__ = ["Controller", "AllocationController", "PrepareController",
 RETRYABLE_REASONS = frozenset({
     "Unsatisfiable", "PlanFailed", "NoPlanner",
     "TemplateMissing", "ClaimMissing", "AdmissionRejected",
+    "NoFeasibleNode", "Unschedulable", "PrepareFailed",
 })
 
 
@@ -103,15 +105,42 @@ class AllocationController(Controller):
                 "DeviceLost" if lost else "SpecChanged",
                 f"lost {len(lost)} device(s)" if lost
                 else "claim spec edited; re-allocating")
+        # node plane: schedulable claims allocate only within the node
+        # set the SchedulerController placed them on (it runs earlier in
+        # this kind's controller chain, so a fresh placement is already
+        # recorded by the time we get here)
+        nodes = None
+        if (plane.store.count("Node") > 0
+                and plane.scheduling_needs(claim) is not None):
+            if not obj.is_true(CONDITION_SCHEDULED, current=True):
+                return self._set(
+                    plane, obj, CONDITION_ALLOCATED, False, "Unschedulable",
+                    "waiting for a scheduler placement") or changed
+            nodes = obj.status.outputs.get("scheduled_nodes")
         t0 = time.perf_counter()
+        off_placement = False
         try:
-            result = plane.allocator.allocate(claim)
+            result = plane.allocator.allocate(claim, nodes=nodes)
         except AllocationError as e:
-            return self._set(plane, obj, CONDITION_ALLOCATED, False,
-                             "Unsatisfiable", str(e)[:240]) or changed
+            if nodes is not None:
+                # the placement proved infeasible against the allocator's
+                # full semantics (MatchAttribute constraints, overlapping
+                # requests) — fall back to the unconstrained search so a
+                # satisfiable claim is never pinned Unsatisfiable by a
+                # capacity-level scheduling decision
+                try:
+                    result = plane.allocator.allocate(claim)
+                    off_placement = True
+                except AllocationError:
+                    return self._set(plane, obj, CONDITION_ALLOCATED, False,
+                                     "Unsatisfiable", str(e)[:240]) or changed
+            else:
+                return self._set(plane, obj, CONDITION_ALLOCATED, False,
+                                 "Unsatisfiable", str(e)[:240]) or changed
         dt = time.perf_counter() - t0
         self._set(plane, obj, CONDITION_ALLOCATED, True, "Allocated",
-                  f"{len(result.devices)} device(s) in {dt * 1e3:.2f}ms")
+                  f"{len(result.devices)} device(s) in {dt * 1e3:.2f}ms"
+                  + (" (off scheduled placement)" if off_placement else ""))
         plane.registry.bus.publish(Events.CLAIM_ALLOCATED, claim=claim)
         return True
 
@@ -138,7 +167,15 @@ class PrepareController(Controller):
         if claim.prepared and obj.is_true(CONDITION_PREPARED, current=True):
             return False
         t0 = time.perf_counter()
-        prepared = plane.registry.prepare(claim)
+        try:
+            prepared = plane.registry.prepare(claim)
+        except Exception as e:  # noqa: BLE001 - node-plane agent failures
+            # a dead node agent cannot serve NodePrepareResources; the
+            # failure is retryable — lease expiry withdraws the node and
+            # the healed allocation prepares on a live one
+            return self._set(plane, obj, CONDITION_PREPARED, False,
+                             "PrepareFailed",
+                             f"{type(e).__name__}: {e}"[:240])
         dt = time.perf_counter() - t0
         return self._set(plane, obj, CONDITION_PREPARED, True, "Prepared",
                          f"{sorted(prepared)} in {dt * 1e3:.2f}ms")
@@ -386,10 +423,22 @@ class ControlPlane:
         self.planner = MeshPlanner(cluster) if cluster is not None else None
         self.allocator = StructuredAllocator(registry.pool, registry.classes)
         self.runtime = runtime or MeshRuntime()
+        # node-plane controllers ride along unconditionally (both are
+        # inert without Node objects); imported late — repro.node builds
+        # on this module's Controller base
+        from ..node.lifecycle import NodeLifecycleController
+        from ..node.scheduler import SchedulerController
+        # Node lifecycle first (evictions land before claims reconcile),
+        # then the scheduler ahead of allocation in the claim chain
         self.controllers: List[Controller] = [
-            AllocationController(), PrepareController(),
+            NodeLifecycleController(),
+            SchedulerController(), AllocationController(),
+            PrepareController(),
             AttachmentController(), WorkloadController(),
         ]
+        # wall-clock for Node leases (injectable: deterministic tests
+        # drive expiry by swapping the clock, not by sleeping)
+        self.node_clock = time.time
         self.phase_latencies: Dict[str, Dict[str, float]] = {}
         self._watch = self.store.watch()
         self.reconcile_mode = reconcile_mode
@@ -681,6 +730,50 @@ class ControlPlane:
         if informer is not None:
             informer._wake.set()
 
+    # -- node plane ----------------------------------------------------------
+    @staticmethod
+    def scheduling_needs(claim: ResourceClaim) -> Optional[Dict[str, int]]:
+        """Device-class -> count a scheduler placement must cover.
+
+        ``None`` marks the claim unschedulable-by-design ('All'-mode
+        requests take whatever matches wherever it is) — such claims
+        bypass the scheduler and allocate unconstrained.
+        """
+        needs: Dict[str, int] = {}
+        for req in claim.spec.requests:
+            if req.allocation_mode != "ExactCount":
+                return None
+            needs[req.device_class] = needs.get(req.device_class, 0) + req.count
+        return needs or None
+
+    def _requeue_expired_leases(self) -> None:
+        """Time-triggered Node dirt: a lapsed lease emits no store event.
+
+        Only the Ready→expired edge needs the clock poll (recovery is
+        event-driven: the returning agent's lease renewal is a store
+        write that re-queues the node). Requeues exactly on the
+        mismatch, so a settled NotReady node costs nothing per round.
+        """
+        if self.store.count("Node") == 0:
+            return
+        from ..node.lifecycle import lease_state
+        now = self.node_clock()
+        for obj in self.store.list_objects("Node"):
+            if (obj.is_true(CONDITION_READY, current=True)
+                    and not lease_state(self, obj.meta.name, now)[0]):
+                self.queue.add("Node", obj.meta.name)
+
+    def _lease_attention_needed(self) -> bool:
+        """Any Ready node whose lease has lapsed? (quiesce guard: the
+        runtime must not settle waiters while an eviction is due)"""
+        if self.store.count("Node") == 0:
+            return False
+        from ..node.lifecycle import lease_state
+        now = self.node_clock()
+        return any(obj.is_true(CONDITION_READY, current=True)
+                   and not lease_state(self, obj.meta.name, now)[0]
+                   for obj in self.store.list_objects("Node"))
+
     # -- event routing (dependency edges) ------------------------------------
     def _requeue_claims_for_nodes(self, nodes: Set[str]) -> None:
         """Requeue claims a batch of slice changes can unblock or break.
@@ -782,6 +875,16 @@ class ControlPlane:
                     self._template_owners[e.name] = live
                 else:
                     self._template_owners.pop(e.name, None)
+        elif kind == "Node":
+            if e.type == DELETED:
+                q.forget(kind, e.name)
+                self._failure_gen.pop((kind, e.name), None)
+            else:
+                q.add(kind, e.name)
+        elif kind == "Lease":
+            # every lease write (heartbeat, takeover, forced expiry)
+            # re-examines the guarded node; lease name == node name
+            q.add("Node", e.name)
 
     def _update_backoff(self, kind: str, name: str, obj: ApiObject) -> None:
         """Post-reconcile bookkeeping: backoff + blocked-claim tracking."""
@@ -832,6 +935,7 @@ class ControlPlane:
                 self.queue.success(e.kind, e.name)
         if slice_nodes:
             self._requeue_claims_for_nodes(slice_nodes)
+        self._requeue_expired_leases()
 
     # -- reconciliation ----------------------------------------------------
     def reconcile(self, max_rounds: int = 64, mode: Optional[str] = None) -> int:

@@ -35,8 +35,9 @@ from ..core.uid import new_uid
 __all__ = [
     "TRUE", "FALSE", "UNKNOWN",
     "Condition", "ObjectMeta", "ObjectStatus", "ApiObject", "Workload",
+    "Node", "Lease",
     "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
-    "CONDITION_READY", "PHASE_ORDER",
+    "CONDITION_READY", "CONDITION_SCHEDULED", "PHASE_ORDER",
 ]
 
 # Condition status values (Kubernetes uses strings, not booleans, so a
@@ -53,6 +54,10 @@ CONDITION_ATTACHED = "Attached"
 CONDITION_READY = "Ready"
 PHASE_ORDER = (CONDITION_ALLOCATED, CONDITION_PREPARED,
                CONDITION_ATTACHED, CONDITION_READY)
+# Set by the SchedulerController on claims placed onto nodes before
+# allocation (node plane only; kept out of PHASE_ORDER so existing
+# phase-latency outputs are unchanged when no nodes exist).
+CONDITION_SCHEDULED = "Scheduled"
 
 
 @dataclass
@@ -171,3 +176,42 @@ class Workload:
                 "template replica sets are not planned into one mesh")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+
+
+@dataclass
+class Node:
+    """One cluster host, registered and heartbeat-kept by its NodeAgent.
+
+    The DraNet-daemon analogue made explicit: a node is an API object
+    whose ``Ready`` condition the :class:`NodeLifecycleController`
+    derives from the freshness of the node's :class:`Lease`. Slices,
+    prepares and attachments for the node's devices are owned by the
+    agent; when the lease lapses the controller withdraws the node's
+    inventory and the claims on it are evicted + rescheduled.
+    """
+
+    name: str
+    # agent identity last holding this node (matches Lease.holder)
+    provider: str = ""
+    # cordoned: stays Ready (inventory kept) but the scheduler skips it,
+    # the drain half of node maintenance
+    unschedulable: bool = False
+    pod: int = 0
+
+
+@dataclass
+class Lease:
+    """A ``coordination.k8s.io``-style lease guarding one node's liveness.
+
+    ``acquired`` (spec) is the registration wall-clock time; renewals
+    are *status* writes (``outputs["renew_time"]``) so a heartbeat bumps
+    only the resource version, never the spec generation. Wall-clock
+    (not monotonic) on purpose: timestamps must stay comparable across
+    control-plane restarts, where a recovered lease is stale until its
+    agent re-registers.
+    """
+
+    name: str                  # == the node name (1:1)
+    holder: str = ""
+    duration_s: float = 1.0
+    acquired: float = 0.0

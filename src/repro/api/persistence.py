@@ -60,8 +60,8 @@ from ..core.oci import AttachmentSpec, DeviceBinding
 from ..core.planner import AxisSpec
 from ..core.resources import Device, DeviceRef, ResourceSlice
 from .chaos import sync_point
-from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus,
-                      Workload, CONDITION_ALLOCATED)
+from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
+                      ObjectStatus, Workload, CONDITION_ALLOCATED)
 from .store import ADDED, DELETED, MODIFIED, ApiStore, WatchEvent
 
 __all__ = [
@@ -76,6 +76,7 @@ __all__ = [
 FORMAT_VERSION = 1
 
 _SNAPSHOT_RE = re.compile(r"^snapshot-(\d{12})\.json$")
+_DELTA_RE = re.compile(r"^delta-(\d{12})\.json$")
 _WAL_RE = re.compile(r"^wal-(\d{12})\.log$")
 
 
@@ -142,6 +143,8 @@ _DATACLASS_CODECS: Dict[str, Tuple[Type[Any], Tuple[str, ...]]] = {
                                       "generation")),
     "Workload": (Workload, ("claim", "claim_template", "axes", "placement",
                             "seed", "role", "replicas", "build_mesh")),
+    "Node": (Node, ("name", "provider", "unschedulable", "pod")),
+    "Lease": (Lease, ("name", "holder", "duration_s", "acquired")),
     "AxisSpec": (AxisSpec, ("name", "size", "physical")),
     "Condition": (Condition, ("type", "status", "reason", "message",
                               "observed_generation", "last_transition")),
@@ -511,8 +514,9 @@ def _state_files(path: str, pattern: re.Pattern) -> List[Tuple[int, str]]:
 
 
 def has_state(path: str) -> bool:
-    """Does ``path`` hold a recoverable snapshot or WAL?"""
+    """Does ``path`` hold a recoverable snapshot, delta chain or WAL?"""
     return bool(_state_files(path, _SNAPSHOT_RE)
+                or _state_files(path, _DELTA_RE)
                 or _state_files(path, _WAL_RE))
 
 
@@ -531,15 +535,23 @@ class StoreJournal:
 
     def __init__(self, store: ApiStore, path: str, *,
                  fsync_every: int = 2048, flush_every: int = 512,
-                 flush_batch: int = 64, snapshot_every: int = 4096):
+                 flush_batch: int = 64, snapshot_every: int = 4096,
+                 full_snapshot_every: int = 8):
         self.store = store
         self.path = path
         self.fsync_every = fsync_every
         self.flush_every = flush_every
         self.flush_batch = flush_batch
         self.snapshot_every = snapshot_every
+        # incremental compaction: only every Nth compaction rewrites the
+        # full store; the ones between write a delta record holding just
+        # the objects touched since the previous compaction (plus
+        # tombstones), so compaction cost tracks churn, not store size.
+        # 1 = every compaction is full (the pre-delta behavior).
+        self.full_snapshot_every = max(int(full_snapshot_every), 1)
         self.wal: Optional[WriteAheadLog] = None
-        self.snapshots = 0
+        self.snapshots = 0           # full snapshots written
+        self.delta_snapshots = 0     # delta records written
         self.events_seen = 0
         # wall time spent serializing/writing (the bench's noise-free
         # numerator for the WAL-overhead ratio)
@@ -547,6 +559,11 @@ class StoreJournal:
         # (kind, name) -> (event type, live object | None, rv for deletes)
         self._pending: Dict[Tuple[str, str],
                             Tuple[str, Optional[ApiObject], Optional[int]]] = {}
+        # deletions since the last compaction (delta tombstones)
+        self._deleted_since_compact: Dict[Tuple[str, str], int] = {}
+        self._last_compact_rv = -1   # base the next delta diffs against
+        self._full_rv = -1           # rv of the newest full snapshot
+        self._deltas_since_full = 0
         self._attached = False
 
     # -- lifecycle ---------------------------------------------------------
@@ -598,6 +615,7 @@ class StoreJournal:
         self.events_seen += 1
         if event.type == DELETED:
             self._pending[key] = (DELETED, None, event.resource_version)
+            self._deleted_since_compact[key] = event.resource_version
         else:
             prev = self._pending.get(key)
             etype = event.type
@@ -656,31 +674,77 @@ class StoreJournal:
             self._compact_locked()
 
     def _compact_locked(self) -> None:
-        """Snapshot at the current store generation; rotate the WAL."""
+        """Compact at the current store generation; rotate the WAL.
+
+        Every ``full_snapshot_every``-th compaction (and the first one)
+        writes a full snapshot; the compactions between write an
+        incremental *delta* record — only the objects whose resource
+        version moved past the previous compaction, plus tombstones for
+        deletions — so steady-state compaction serializes O(churn)
+        instead of rewriting the whole store each time. Recovery applies
+        newest full snapshot -> delta chain -> WAL.
+        """
         rv = self.store.resource_version
-        snap = os.path.join(self.path, f"snapshot-{rv:012d}.json")
-        tmp = snap + ".tmp"
         os.makedirs(self.path, exist_ok=True)
-        with open(tmp, "w") as f:
-            json.dump(dump_store(self.store), f, sort_keys=True,
-                      separators=(",", ":"))
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, snap)
+        full = (self._full_rv < 0 or self._last_compact_rv < 0
+                or rv == self._last_compact_rv
+                or self._deltas_since_full + 1 >= self.full_snapshot_every)
+        if full:
+            self._write_json(f"snapshot-{rv:012d}.json", dump_store(self.store))
+            self._full_rv = rv
+            self._deltas_since_full = 0
+            self.snapshots += 1
+        else:
+            base = self._last_compact_rv
+            with self.store.lock:
+                changed = [dump_api_object(o)
+                           for o in sorted(self.store.list_objects(),
+                                           key=lambda o: (o.meta.kind,
+                                                          o.meta.name))
+                           if o.meta.resource_version > base]
+            tombstones = sorted([k, n] for (k, n)
+                                in self._deleted_since_compact)
+            self._write_json(f"delta-{rv:012d}.json",
+                             {"format": FORMAT_VERSION, "base": base,
+                              "resource_version": rv, "objects": changed,
+                              "deleted": tombstones})
+            self._deltas_since_full += 1
+            self.delta_snapshots += 1
+        self._deleted_since_compact = {}
+        self._last_compact_rv = rv
         if self.wal is not None:
             self.wal.close()
         self.wal = WriteAheadLog(
             os.path.join(self.path, f"wal-{rv:012d}.log"),
             fsync_every=self.fsync_every)
-        self.snapshots += 1
-        # old segments are garbage once the new snapshot is durable
-        for base, fp in (_state_files(self.path, _SNAPSHOT_RE)
-                         + _state_files(self.path, _WAL_RE)):
+        # reap superseded segments: everything at or before the newest
+        # full snapshot except the snapshot itself, plus any WAL the
+        # delta chain now covers
+        for base, fp in _state_files(self.path, _SNAPSHOT_RE):
+            if base != self._full_rv:
+                self._remove(fp)
+        for base, fp in _state_files(self.path, _DELTA_RE):
+            if base <= self._full_rv or base > rv:
+                self._remove(fp)
+        for base, fp in _state_files(self.path, _WAL_RE):
             if base != rv:
-                try:
-                    os.remove(fp)
-                except OSError:
-                    pass
+                self._remove(fp)
+
+    def _write_json(self, name: str, payload: Dict[str, Any]) -> None:
+        path = os.path.join(self.path, name)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, sort_keys=True, separators=(",", ":"))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    @staticmethod
+    def _remove(path: str) -> None:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
 
 
 # ---------------------------------------------------------------------------
@@ -694,6 +758,8 @@ class RecoveryInfo:
     wal_records: int = 0
     objects: int = 0
     resource_version: int = 0
+    deltas_applied: int = 0            # delta records chained in
+    delta_objects: int = 0
     dropped_outputs: Dict[Tuple[str, str], List[str]] = field(
         default_factory=dict)
     torn_tail: bool = False
@@ -701,22 +767,26 @@ class RecoveryInfo:
     def summary(self) -> str:
         dropped = sum(len(v) for v in self.dropped_outputs.values())
         return (f"v{self.resource_version}: {self.objects} object(s) from "
-                f"snapshot@{self.snapshot_rv} + {self.wal_records} WAL "
+                f"snapshot@{self.snapshot_rv} + {self.deltas_applied} "
+                f"delta(s) + {self.wal_records} WAL "
                 f"record(s), {dropped} derived output(s) to re-derive")
 
 
 def recover_store(path: str) -> Tuple[ApiStore, RecoveryInfo]:
-    """Replay snapshot + WAL from ``path`` into a fresh :class:`ApiStore`.
+    """Replay snapshot + delta chain + WAL into a fresh :class:`ApiStore`.
 
-    Picks the newest snapshot that parses (older ones are fallbacks for
-    a crash mid-compaction), then applies every WAL record with a
-    resource version beyond it, in segment order. A torn WAL tail is
-    dropped. Raises :class:`RecoveryError` when nothing usable exists.
+    Picks the newest full snapshot that parses (older ones are fallbacks
+    for a crash mid-compaction), chains every delta record whose ``base``
+    matches the running resource version (incremental compaction,
+    :class:`StoreJournal`), then applies every WAL record beyond the
+    chain, in segment order. A torn WAL tail is dropped. Raises
+    :class:`RecoveryError` when nothing usable exists.
     """
     snapshots = _state_files(path, _SNAPSHOT_RE)
+    deltas = _state_files(path, _DELTA_RE)
     wals = _state_files(path, _WAL_RE)
-    if not snapshots and not wals:
-        raise RecoveryError(f"no snapshot or WAL in {path!r}")
+    if not snapshots and not deltas and not wals:
+        raise RecoveryError(f"no snapshot, delta or WAL in {path!r}")
 
     objects: Dict[Tuple[str, str], ApiObject] = {}
     base_rv, snapshot_rv = -1, -1
@@ -734,6 +804,40 @@ def recover_store(path: str) -> Tuple[ApiStore, RecoveryInfo]:
             break
         except (OSError, ValueError, KeyError, UnencodableError):
             continue
+
+    # delta chain: each record names the compaction generation it diffs
+    # against; a gap (missing/corrupt link, or a delta older than the
+    # chosen snapshot) ends the chain — later deltas cannot apply
+    deltas_applied = delta_objects = 0
+    chain_rv = base_rv if base_rv >= 0 else None
+    for drv, delta_path in deltas:
+        if chain_rv is not None and drv <= chain_rv:
+            continue
+        try:
+            with open(delta_path) as f:
+                dump = json.load(f)
+            if dump.get("format") != FORMAT_VERSION:
+                break
+            if chain_rv is not None and dump.get("base") != chain_rv:
+                break
+            if chain_rv is None:
+                # no usable snapshot: a chain can still start from a
+                # delta whose base is the (lost) initial snapshot only
+                # if it carries every live object — which we cannot
+                # know, so refuse rather than silently under-recover
+                break
+            for k, n in dump.get("deleted", ()):
+                objects.pop((k, n), None)
+            for d in dump["objects"]:
+                obj = load_api_object(d)
+                objects[(obj.meta.kind, obj.meta.name)] = obj
+                delta_objects += 1
+            chain_rv = dump["resource_version"]
+            deltas_applied += 1
+        except (OSError, ValueError, KeyError, UnencodableError):
+            break
+    if chain_rv is not None:
+        base_rv = max(base_rv, chain_rv)
 
     last_rv = max(base_rv, 0)
     replayed = 0
@@ -754,7 +858,9 @@ def recover_store(path: str) -> Tuple[ApiStore, RecoveryInfo]:
     store = _store_from_objects(objects, last_rv)
     info = RecoveryInfo(path=path, snapshot_rv=snapshot_rv,
                         wal_records=replayed, objects=len(store),
-                        resource_version=store.resource_version)
+                        resource_version=store.resource_version,
+                        deltas_applied=deltas_applied,
+                        delta_objects=delta_objects)
     for obj in store.list_objects():
         dropped = [k for k, v in obj.status.outputs.items()
                    if isinstance(v, Unpersisted)]

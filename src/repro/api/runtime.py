@@ -143,7 +143,13 @@ class ConditionWaiter:
 
 @dataclass
 class RuntimeStats:
-    """Counters the tests and the overlap benchmark assert against."""
+    """Counters the tests and the overlap benchmark assert against.
+
+    Also callable: ``runtime.stats()`` returns the counters merged with
+    the shared :class:`~repro.api.workqueue.WorkQueue`'s telemetry
+    (per-kind queue depth, backoff counts, requeue rate) — the
+    operational snapshot ``bench_informer`` prints.
+    """
 
     dispatched: int = 0          # keys handed to worker inboxes
     reconciled: int = 0          # keys a worker finished (incl. no-ops)
@@ -155,6 +161,25 @@ class RuntimeStats:
     informer_rounds: int = 0
     last_panic: Optional[str] = None
     panic_log: List[str] = field(default_factory=list)
+    _runtime: Optional["ControlPlaneRuntime"] = field(
+        default=None, repr=False, compare=False)
+
+    def __call__(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "dispatched": self.dispatched,
+            "reconciled": self.reconciled,
+            "redispatch_deferred": self.redispatch_deferred,
+            "panics": self.panics,
+            "restarts": self.restarts,
+            "waiters_resolved": self.waiters_resolved,
+            "waiters_failed": self.waiters_failed,
+            "informer_rounds": self.informer_rounds,
+        }
+        rt = self._runtime
+        if rt is not None:
+            with rt.lock:   # queue counters mutate under the plane lock
+                out["workqueue"] = rt.plane.queue.telemetry()
+        return out
 
 
 class ControlPlaneRuntime:
@@ -187,7 +212,7 @@ class ControlPlaneRuntime:
                         if max_rate_hz is not None else None)
         self.max_worker_restarts = max_worker_restarts
         self.name = name
-        self.stats = RuntimeStats()
+        self.stats = RuntimeStats(_runtime=self)
         # the plane's reconcile lock serializes controller critical
         # sections (and any out-of-band pool/registry mutation)
         self.lock: threading.RLock = plane.reconcile_lock
@@ -451,7 +476,11 @@ class ControlPlaneRuntime:
                     # a generation counter would be settled away
                     or pool.release_generation != plane._seen_release_gen
                     or pool.inventory_generation != plane._synced_pool_gen
-                    or plane.registry.classes.keys() - plane._synced_classes):
+                    or plane.registry.classes.keys() - plane._synced_classes
+                    # a Ready node with a lapsed lease has an eviction
+                    # due: settling waiters now would fail them just
+                    # before the node plane converges them
+                    or plane._lease_attention_needed()):
                 return
             self._quiesced.set()
             self._settle_waiters_locked()

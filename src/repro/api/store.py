@@ -45,8 +45,8 @@ from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
 from ..core.claims import (DeviceClass, ResourceClaim, ResourceClaimTemplate)
 from ..core.resources import ResourceSlice
 from .chaos import sync_point
-from .objects import (ApiObject, Condition, ObjectMeta, ObjectStatus, TRUE,
-                      Workload)
+from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
+                      ObjectStatus, TRUE, Workload)
 
 __all__ = ["ApiStore", "Watch", "WatchEvent", "ConflictError",
            "ApiError", "AdmissionError", "KIND_OF"]
@@ -59,6 +59,8 @@ KIND_OF: Dict[Type[Any], str] = {
     DeviceClass: "DeviceClass",
     ResourceSlice: "ResourceSlice",
     Workload: "Workload",
+    Node: "Node",
+    Lease: "Lease",
 }
 
 

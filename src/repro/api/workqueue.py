@@ -47,6 +47,10 @@ class WorkQueue:
         self.enqueued = 0
         self.popped = 0
         self.deferred = 0
+        # keys re-dirtied after having been popped at least once — the
+        # numerator of the requeue rate (work the loop saw more than once)
+        self.requeues = 0
+        self._popped_once: Dict[Key, None] = {}
 
     # -- enqueue -------------------------------------------------------------
     def add(self, kind: str, name: str) -> None:
@@ -56,6 +60,8 @@ class WorkQueue:
         if name not in bucket:
             bucket[name] = None
             self.enqueued += 1
+            if (kind, name) in self._popped_once:
+                self.requeues += 1
 
     def add_all(self, kind: str, names: Iterable[str]) -> None:
         for n in names:
@@ -80,6 +86,7 @@ class WorkQueue:
     def forget(self, kind: str, name: str) -> None:
         """Drop all queue state for a deleted object."""
         self.success(kind, name)
+        self._popped_once.pop((kind, name), None)
         bucket = self._dirty.get(kind)
         if bucket is not None:
             bucket.pop(name, None)
@@ -110,6 +117,7 @@ class WorkQueue:
                 else:
                     out.append((kind, name))
                     self.popped += 1
+                    self._popped_once[(kind, name)] = None
             self._dirty[kind] = keep
         return out
 
@@ -138,6 +146,32 @@ class WorkQueue:
     def pending(self) -> List[Key]:
         """Every queued key (ready or in backoff), in kind order."""
         return [(k, n) for k, bucket in self._dirty.items() for n in bucket]
+
+    def depth_by_kind(self) -> Dict[str, int]:
+        """Current dirty-queue depth per kind (zero-depth kinds omitted)."""
+        return {k: len(b) for k, b in self._dirty.items() if b}
+
+    def telemetry(self) -> Dict[str, object]:
+        """Operational counters for ``ControlPlaneRuntime.stats()``.
+
+        ``requeue_rate`` is requeues ÷ pops — how often a popped key came
+        back (healing churn, backoff retries); ``in_backoff`` counts keys
+        currently parked inside a backoff window.
+        """
+        return {
+            "depth_by_kind": self.depth_by_kind(),
+            "depth": len(self),
+            "clock": self._clock,
+            "enqueued": self.enqueued,
+            "popped": self.popped,
+            "deferred": self.deferred,
+            "requeues": self.requeues,
+            "requeue_rate": round(self.requeues / self.popped, 4)
+                            if self.popped else 0.0,
+            "in_backoff": sum(1 for key in self._not_before
+                              if key[1] in self._dirty.get(key[0], ())),
+            "failing_objects": len(self._failures),
+        }
 
     def __repr__(self) -> str:
         return (f"WorkQueue(dirty={len(self)}, clock={self._clock}, "

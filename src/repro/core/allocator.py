@@ -57,7 +57,14 @@ class StructuredAllocator:
     naive: bool = False
 
     # -- public api --------------------------------------------------------
-    def allocate(self, claim: ResourceClaim, node: Optional[str] = None) -> AllocationResult:
+    def allocate(self, claim: ResourceClaim, node: Optional[str] = None,
+                 nodes: Optional[Sequence[str]] = None) -> AllocationResult:
+        """Solve ``claim`` against the pool (optionally constrained).
+
+        ``node`` pins a node-scoped claim to one node; ``nodes``
+        restricts a cluster-scoped claim's candidates to a scheduler-
+        chosen node set (and a node-scoped claim's search to that set).
+        """
         if claim.allocated:
             raise AllocationError(f"claim {claim.name} already allocated")
         scope = claim.spec.topology_scope
@@ -65,9 +72,14 @@ class StructuredAllocator:
             raise AllocationError(f"unknown topology_scope {scope!r}")
 
         if scope == "node":
-            nodes = [node] if node else self.pool.nodes()
+            if node:
+                candidates = [node]
+            elif nodes is not None:
+                candidates = sorted(nodes)
+            else:
+                candidates = self.pool.nodes()
             best: Optional[Tuple[float, str, List[Tuple[str, Device]]]] = None
-            for n in nodes:
+            for n in candidates:
                 assignment = self._solve(claim, node=n)
                 if assignment is None:
                     continue
@@ -77,14 +89,18 @@ class StructuredAllocator:
             if best is None:
                 raise AllocationError(
                     f"claim {claim.name}: no node satisfies "
-                    f"{[r.name for r in claim.spec.requests]}")
+                    f"{[r.name for r in claim.spec.requests]}"
+                    + (f" within scheduled nodes {sorted(nodes)}"
+                       if nodes is not None else ""))
             _, chosen_node, assignment = best
         else:
-            assignment = self._solve(claim, node=None)
+            assignment = self._solve(claim, node=None, nodes=nodes)
             if assignment is None:
                 raise AllocationError(
                     f"claim {claim.name}: cluster inventory cannot satisfy "
-                    f"{[(r.name, r.count) for r in claim.spec.requests]}")
+                    f"{[(r.name, r.count) for r in claim.spec.requests]}"
+                    + (f" within scheduled nodes {sorted(nodes)}"
+                       if nodes is not None else ""))
             chosen_node = ""
 
         devices = [d for _, d in assignment]
@@ -102,14 +118,18 @@ class StructuredAllocator:
         claim.prepared = False
 
     # -- search ------------------------------------------------------------
-    def _candidates(self, req: DeviceRequest, node: Optional[str]) -> List[Device]:
+    def _candidates(self, req: DeviceRequest, node: Optional[str],
+                    nodes: Optional[Sequence[str]] = None) -> List[Device]:
         cls = self.classes.get(req.device_class)
         if cls is None:
             raise AllocationError(f"unknown device class {req.device_class!r}")
         if self.naive:
+            allowed = set(nodes) if nodes is not None else None
             out = []
             for d in self.pool.devices(include_allocated=False):
                 if node is not None and d.node != node:
+                    continue
+                if allowed is not None and d.node not in allowed:
                     continue
                 if cls.matches(d) and req.selector_match(d):
                     out.append(d)
@@ -123,15 +143,21 @@ class StructuredAllocator:
         key = (req.fingerprint(), tuple(cls.selectors))
         idx = self.pool.index(
             key, lambda d: cls.matches(d) and req.selector_match(d))
+        if node is None and nodes is not None:
+            # scheduler-constrained cluster claim: filtering the sorted
+            # free list preserves the deterministic id order
+            allowed = set(nodes)
+            return [d for d in idx.free_devices(None) if d.node in allowed]
         return list(idx.free_devices(node))
 
-    def _solve(self, claim: ResourceClaim,
-               node: Optional[str]) -> Optional[List[Tuple[str, Device]]]:
+    def _solve(self, claim: ResourceClaim, node: Optional[str],
+               nodes: Optional[Sequence[str]] = None
+               ) -> Optional[List[Tuple[str, Device]]]:
         requests = claim.spec.requests
         constraints = claim.spec.constraints
         cand: Dict[str, List[Device]] = {}
         for req in requests:
-            c = self._candidates(req, node)
+            c = self._candidates(req, node, nodes)
             want = len(c) if req.allocation_mode == "All" else req.count
             if len(c) < want or want == 0:
                 return None

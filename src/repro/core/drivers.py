@@ -53,6 +53,16 @@ class KNDDriver:
         """Walk the local inventory and publish slices."""
         return []
 
+    def discover_node(self, node: str) -> List[ResourceSlice]:
+        """This driver's slices for ONE node — the node-agent's share.
+
+        The per-node daemon (repro.node.agent.NodeAgent) publishes only
+        its host's inventory, exactly like a DraNet daemon does; the
+        default implementation slices the full walk, drivers with
+        node-indexed inventories may override for O(node) cost.
+        """
+        return [sl for sl in self.discover() if sl.node == node]
+
     def node_prepare_resources(self, claim: ResourceClaim) -> Dict[str, Any]:
         """Slow setup ahead of the critical path; caches the pushed config.
 
@@ -263,6 +273,12 @@ class DriverRegistry:
     classes: Dict[str, DeviceClass] = field(default_factory=dict)
     # driver name -> inventory generation last published into the pool
     published_generations: Dict[str, int] = field(default_factory=dict)
+    # the attached repro.node.agent.NodePlane, when the cluster runs
+    # per-node agents: central discovery then publishes only nodes whose
+    # agent is alive (a withdrawn node must not resurrect behind the
+    # lifecycle controller's back) and NodePrepareResources routes
+    # through the owning agents instead of straight into the drivers
+    node_plane: Any = None
     # pool inventory generation right after our last publication; a
     # mismatch means someone else mutated the pool (e.g. withdraw_node)
     # and the skip optimization must not suppress re-publication
@@ -302,6 +318,9 @@ class DriverRegistry:
             if not force and self.published_generations.get(driver.name) == gen:
                 continue
             for sl in driver.discover():
+                if (self.node_plane is not None
+                        and not self.node_plane.admits(sl.node)):
+                    continue        # dead/failed node: its agent owns it
                 self.pool.publish(sl)
                 n += len(sl)
                 published = True
@@ -311,14 +330,60 @@ class DriverRegistry:
             self.bus.publish(Events.DISCOVERY, pool=self.pool)
         return n
 
+    def publish_node(self, node: str) -> int:
+        """Publish ONE node's slices across all drivers (the node-agent
+        discovery path). Does not touch other nodes' slices."""
+        n = 0
+        for driver in self.drivers.values():
+            for sl in driver.discover_node(node):
+                self.pool.publish(sl)
+                n += len(sl)
+        self._pool_gen_at_publish = self.pool.inventory_generation
+        if n:
+            self.bus.publish(Events.DISCOVERY, pool=self.pool, node=node)
+        return n
+
     def prepare(self, claim: ResourceClaim) -> Dict[str, Dict[str, Any]]:
-        """NodePrepareResources across all drivers owning claim devices."""
-        out = {}
+        """NodePrepareResources across all drivers owning claim devices.
+
+        With a node plane attached, the call routes through the owning
+        node's agent (kubelet -> per-node DRA driver, Fig. 4): a claim
+        whose devices sit on a node with a dead agent fails to prepare —
+        surfaced as a retryable ``Prepared=False`` condition, not a
+        silent central success the real system could never deliver.
+        """
+        out: Dict[str, Dict[str, Any]] = {}
         if claim.allocation is None:
             raise ValueError(f"claim {claim.name} not allocated")
-        involved = {a.ref.driver for a in claim.allocation.devices}
-        for name in involved:
-            if name in self.drivers:
-                out[name] = self.drivers[name].node_prepare_resources(claim)
+        if self.node_plane is not None:
+            by_node: Dict[str, set] = {}
+            for a in claim.allocation.devices:
+                by_node.setdefault(a.ref.node, set()).add(a.ref.driver)
+            # every involved node must be serving — a single dead agent
+            # fails the whole prepare (retryable; eviction heals it)
+            dead = [n for n in sorted(by_node)
+                    if (ag := self.node_plane.agent(n)) is None
+                    or not ag.alive]
+            if dead:
+                from ..node.agent import NodeUnavailableError
+                raise NodeUnavailableError(
+                    f"claim {claim.name}: node(s) {dead} have no live "
+                    f"agent to serve NodePrepareResources")
+            # each driver's (claim-scoped) slow setup runs ONCE, served
+            # by the first live node owning it — not once per node,
+            # which would duplicate the setup k× and overwrite results
+            served: set = set()
+            for node in sorted(by_node):
+                todo = sorted(d for d in by_node[node]
+                              if d in self.drivers and d not in served)
+                if todo:
+                    out.update(self.node_plane.agent(
+                        node).node_prepare_resources(claim, todo))
+                    served.update(todo)
+        else:
+            involved = {a.ref.driver for a in claim.allocation.devices}
+            for name in sorted(involved):
+                if name in self.drivers:
+                    out[name] = self.drivers[name].node_prepare_resources(claim)
         self.bus.publish(Events.NODE_PREPARE_RESOURCES, claim=claim, prepared=out)
         return out

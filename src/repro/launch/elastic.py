@@ -16,12 +16,15 @@ the bus can be escalated by policy to treat the slow host as failed.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from .. import core
-from ..api import ControlPlane, ControlPlaneRuntime, Workload
+from ..api import (ControlPlane, ControlPlaneRuntime, Workload,
+                   CONDITION_READY)
 from ..core.nri import Event, Events
+from ..node import NodePlane
 from ..topology.tpu import TpuCluster
 
 __all__ = ["ElasticController", "largest_mesh_shape"]
@@ -65,6 +68,15 @@ class ElasticController:
     # still lands on the edited spec (level-triggered). "inline" keeps
     # the blocking reference arm.
     reconcile_mode: str = "threaded"
+    # run per-node agents (repro.node): failures are detected through
+    # lease expiry + the NodeLifecycleController instead of an explicit
+    # withdraw — the node-plane failure domain end to end
+    use_node_plane: bool = False
+    node_heartbeat_s: float = 0.1
+    node_lease_s: float = 0.5
+    # stragglers on the same host escalate to a node failure after this
+    # many strikes; counts survive WAL recovery (workload status output)
+    straggler_strike_limit: int = 3
     events: List[str] = field(default_factory=list)
 
     CLAIM = "elastic-train"
@@ -78,6 +90,29 @@ class ElasticController:
         self.plane = ControlPlane.open(self.state_dir, self.registry,
                                        self.cluster,
                                        announce=self.events.append)
+        self.node_plane: Optional[NodePlane] = None
+        if self.use_node_plane:
+            # start agents BEFORE the informer: recovered Nodes carry
+            # stale leases, and reconciling them agent-less would evict
+            # perfectly healthy adopted claims
+            # heartbeat threads run in BOTH modes: an inline reconcile
+            # minutes later must still see live leases
+            self.node_plane = NodePlane(
+                self.plane, heartbeat_s=self.node_heartbeat_s,
+                lease_duration_s=self.node_lease_s).start()
+            self.events.append(
+                f"node plane started: {len(self.node_plane.agents)} agent(s)")
+        # recovery-aware resume: strike counts ride the workload's
+        # status outputs through the WAL, so a restarted controller
+        # keeps escalating where the dead one left off
+        self.strikes: Dict[str, int] = {}
+        wl = self.plane.store.try_get("Workload", self.WORKLOAD)
+        if wl is not None:
+            restored = wl.status.outputs.get("straggler_strikes", {})
+            self.strikes = {str(k): int(v) for k, v in restored.items()}
+            if self.strikes:
+                self.events.append(f"restored straggler strikes: "
+                                   f"{dict(sorted(self.strikes.items()))}")
         if self.reconcile_mode == "threaded":
             ControlPlaneRuntime(self.plane, name="elastic-informer").start()
             self.events.append("informer runtime started")
@@ -88,6 +123,8 @@ class ElasticController:
 
     def close(self) -> None:
         """Stop the informer runtime (joins its threads, syncs the WAL)."""
+        if self.node_plane is not None:
+            self.node_plane.stop()
         if self.plane.informer is not None:
             self.plane.informer.stop()
 
@@ -146,26 +183,83 @@ class ElasticController:
         return self.plan
 
     # -- failure handling -----------------------------------------------------
+    def _evict_node(self, node: str) -> None:
+        """Remove ``node`` from the schedulable world.
+
+        With a node plane the eviction is the *lifecycle* path: kill the
+        agent, force-expire its lease, and wait for the
+        NodeLifecycleController to withdraw the inventory — the same
+        road a silent agent death takes, minus the detection window.
+        Without one it is the direct pool withdrawal, as before.
+        """
+        if self.node_plane is not None and node in self.node_plane.agents:
+            self.node_plane.fail_node(node)
+            if self.reconcile_mode == "inline":
+                self.plane.reconcile()
+            else:
+                deadline = time.monotonic() + 10.0
+                while time.monotonic() < deadline:
+                    obj = self.plane.store.try_get("Node", node)
+                    done = (obj is None
+                            or not obj.is_true(CONDITION_READY, current=True))
+                    if done and not any(s.node == node for s in
+                                        self.registry.pool.slices):
+                        return
+                    time.sleep(0.01)
+                raise RuntimeError(
+                    f"node {node} was not evicted within 10s")
+        else:
+            with self.plane.mutate():
+                self.registry.pool.withdraw_node(node)
+
     def on_node_failed(self, event: Event) -> Dict[str, Any]:
         node = event.context["node"]
         self.events.append(f"node_failed {node}")
-        # withdraw the node's slices; the reconcilers see the lost
-        # devices + the shrunk spec and converge on a survivor mesh
-        # (under the reconcile lock: informer workers must not observe a
-        # half-withdrawn pool)
-        with self.plane.mutate():
-            self.registry.pool.withdraw_node(node)
+        return self._handle_node_failure(node)
+
+    def _handle_node_failure(self, node: str) -> Dict[str, Any]:
+        # evict the node (lifecycle path or direct withdrawal); the
+        # reconcilers see the lost devices + the shrunk spec and
+        # converge on a survivor mesh
+        self._evict_node(node)
         plan = self.plan_mesh()
         self.registry.bus.publish(Events.JOB_RESUMED,
                                   plan=plan, reason=f"lost {node}")
         return {"replanned": plan.summary()}
 
     def on_straggler(self, event: Event) -> Optional[Dict[str, Any]]:
-        # policy: persistent stragglers are treated as failures; the
-        # telemetry driver publishes the event, we count strikes per host
+        # policy: persistent stragglers ARE failures. The telemetry
+        # driver publishes the event; strikes accumulate per host (or in
+        # the 'unknown' bucket when the event carries no host) and are
+        # persisted on the workload so WAL recovery resumes the count.
         step = event.context.get("step")
-        self.events.append(f"straggler at step {step}")
-        return None
+        host = str(event.context.get("host") or event.context.get("node")
+                   or "")
+        key = host or "unknown"
+        self.strikes[key] = self.strikes.get(key, 0) + 1
+        count = self.strikes[key]
+        self.events.append(f"straggler at step {step} "
+                           f"({key}: strike {count})")
+        if host and count >= self.straggler_strike_limit:
+            self.events.append(
+                f"straggler escalation: {host} struck out "
+                f"({count}/{self.straggler_strike_limit}), treating as failed")
+            self.strikes.pop(key, None)
+            self._persist_strikes()
+            return self._handle_node_failure(host)
+        self._persist_strikes()
+        return {"strikes": count, "host": key}
+
+    def _persist_strikes(self) -> None:
+        """Strike counts ride the workload status through the WAL."""
+        if self.plane.store.try_get("Workload", self.WORKLOAD) is None:
+            return
+        snapshot = dict(self.strikes)
+        self.plane.store.update_status(
+            "Workload", self.WORKLOAD,
+            lambda st: st.outputs.__setitem__("straggler_strikes", snapshot))
+        if self.plane.journal is not None:
+            self.plane.journal.maybe_flush()
 
     # -- introspection ------------------------------------------------------
     @property

@@ -19,7 +19,8 @@ import time
 
 
 def provision_replicas(slots: int, chips_per_replica: int,
-                       state_dir: str = None, reconcile_mode: str = "threaded"):
+                       state_dir: str = None, reconcile_mode: str = "threaded",
+                       node_plane: bool = False):
     """Declarative serve replica set -> (plane, workload ApiObject).
 
     With ``state_dir``, an existing WAL is recovered first: the stamped
@@ -32,6 +33,12 @@ def provision_replicas(slots: int, chips_per_replica: int,
     threads keep reconciling while the serve engine runs — a replica
     resize converges *under* the decode loop. The runtime is left
     running on ``plane.informer``; the caller stops it.
+
+    ``node_plane=True`` runs per-node agents: replica claims are placed
+    by the topology scheduler (packed near their siblings) and a node
+    death evicts + re-places its replicas while the engine decodes. The
+    started :class:`~repro.node.NodePlane` is reachable as
+    ``plane.registry.node_plane``; the caller stops it.
     """
     from .. import core
     from ..api import ControlPlane, ControlPlaneRuntime, Workload
@@ -43,7 +50,10 @@ def provision_replicas(slots: int, chips_per_replica: int,
     reg = core.DriverRegistry()
     reg.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
     plane = ControlPlane.open(state_dir, reg, cluster)
-    if reconcile_mode == "threaded":
+    if node_plane:
+        from ..node import NodePlane
+        NodePlane(plane).start()     # agents first (fresh leases), then
+    if reconcile_mode == "threaded":  # the informer
         ControlPlaneRuntime(plane).start()   # reachable as plane.informer
 
     if plane.store.try_get("ResourceClaimTemplate", "serve-replica") is None:
@@ -89,6 +99,9 @@ def main() -> None:
                     help="threaded: informer runtime converges replica "
                          "sets while the engine decodes (default); "
                          "inline: blocking reference arm")
+    ap.add_argument("--node-plane", action="store_true",
+                    help="run per-node agents; replica claims are "
+                         "scheduler-placed and survive node death")
     args = ap.parse_args()
 
     knd = None
@@ -96,7 +109,8 @@ def main() -> None:
     if args.claim_chips > 0:
         plane, wl = provision_replicas(args.slots, args.claim_chips,
                                        state_dir=args.state_dir,
-                                       reconcile_mode=args.reconcile_mode)
+                                       reconcile_mode=args.reconcile_mode,
+                                       node_plane=args.node_plane)
         lat = wl.status.outputs["phase_latency_s"]
         claims = wl.status.outputs["claims"]
         print(f"[knd] serve replica set Ready: {len(claims)} claims "
@@ -138,6 +152,8 @@ def main() -> None:
         stats = plane.informer.stop()       # informers ran under the engine
         out["knd"]["informer"] = {"reconciled": stats.reconciled,
                                   "rounds": stats.informer_rounds}
+    if plane is not None and plane.registry.node_plane is not None:
+        plane.registry.node_plane.stop()
     print(json.dumps(out, indent=1))
 
 

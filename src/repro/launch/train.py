@@ -49,6 +49,11 @@ def main() -> None:
                          "converging while training steps execute "
                          "(default); inline: blocking reconcile() "
                          "reference arm")
+    ap.add_argument("--node-plane", action="store_true",
+                    help="run per-node agents (repro.node): slices are "
+                         "published per host under heartbeat leases, "
+                         "claims are placed by the topology scheduler, "
+                         "and a dead agent is evicted + rescheduled")
     args = ap.parse_args()
 
     if args.devices:
@@ -76,6 +81,7 @@ def main() -> None:
     plan = None
     plane = None
     informer = None
+    node_plane = None
     if args.mesh:
         from .. import core
         from ..api import (ControlPlane, ControlPlaneRuntime, Workload,
@@ -103,6 +109,14 @@ def main() -> None:
             # kill-and-resume: an existing state dir is recovered and
             # its in-flight workload adopted
             plane = ControlPlane.open(args.state_dir, reg, cluster)
+        if args.node_plane:
+            # agents register BEFORE the informer starts: recovered
+            # Nodes hold stale leases and must re-heartbeat first, else
+            # the lifecycle controller would evict adopted claims
+            from ..node import NodePlane
+            node_plane = NodePlane(plane).start()
+            print(f"[knd] node plane: {len(node_plane.agents)} agent(s), "
+                  f"scheduler placing claims onto nodes")
         if args.reconcile_mode == "threaded":
             # submit-and-wait against a *running* runtime: the informer
             # threads keep reconciling (and WAL-journaling) while the
@@ -160,6 +174,8 @@ def main() -> None:
         print(f"[knd] informer runtime stopped after training: "
               f"{stats.reconciled} reconciles over "
               f"{stats.informer_rounds} rounds, {stats.panics} panics")
+    if node_plane is not None:
+        node_plane.stop()
 
     losses = [h["loss"] for h in trainer.history]
     print(json.dumps({

@@ -1,0 +1,86 @@
+"""NodeLifecycleController: lease freshness -> Node Ready -> eviction.
+
+The kube node-lifecycle loop, reduced to its load-bearing core: a node
+is Ready exactly while its :class:`~repro.api.objects.Lease` is fresh.
+A missed heartbeat window flips the node NotReady, withdraws its
+ResourceSlices from the pool and prunes the mirrored slice objects —
+which is all it takes: the existing AllocationController healing path
+sees the lost devices, deallocates, and (via the SchedulerController)
+re-places the evicted claims onto surviving nodes. Eviction is therefore
+*not* a special code path; it is the same level-triggered convergence a
+spec edit or a withdrawn pool takes.
+
+Time base: leases carry wall-clock stamps (``ControlPlane.node_clock``,
+injectable for deterministic tests) so a recovered control plane sees
+pre-crash leases as stale until their agents re-register.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional, Tuple
+
+from ..api.controllers import Controller
+from ..api.objects import (ApiObject, CONDITION_READY, Lease, Node)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..api.controllers import ControlPlane
+
+__all__ = ["NodeLifecycleController", "lease_state"]
+
+
+def lease_state(plane: "ControlPlane", node: str,
+                now: Optional[float] = None) -> Tuple[bool, str]:
+    """(fresh, detail) for ``node``'s lease against the plane's clock.
+
+    A missing lease, a lapsed renew window, or a renew stamp from the
+    future (a clock that moved backwards across a restart) all read as
+    stale — only a recent, plausible heartbeat keeps a node alive.
+    ``detail`` is deliberately age-free: condition messages must be
+    stable across re-evaluations or the reconcile loop never fixpoints.
+    """
+    lobj = plane.store.try_get("Lease", node)
+    if lobj is None:
+        return False, "no lease"
+    lease: Lease = lobj.spec
+    now = plane.node_clock() if now is None else now
+    renew = lobj.status.outputs.get("renew_time", lease.acquired)
+    age = now - renew
+    if age > lease.duration_s:
+        return False, f"lease lapsed (window {lease.duration_s}s)"
+    if -age > lease.duration_s:
+        return False, "lease renewed in the future (clock skew)"
+    return True, f"lease held by {lease.holder!r} (window {lease.duration_s}s)"
+
+
+class NodeLifecycleController(Controller):
+    """Node Ready roll-up + dead-node inventory withdrawal."""
+
+    kind = "Node"
+    name = "node-lifecycle-controller"
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        node: Node = obj.spec
+        fresh, detail = lease_state(plane, node.name)
+        if fresh:
+            changed = False
+            if node.unschedulable:
+                # cordoned: inventory stays (running claims keep their
+                # devices) but the scheduler filters the node out
+                changed |= self._set(plane, obj, CONDITION_READY, True,
+                                     "Cordoned", f"unschedulable; {detail}")
+            else:
+                changed |= self._set(plane, obj, CONDITION_READY, True,
+                                     "HeartbeatFresh", detail)
+            return changed
+        changed = self._set(plane, obj, CONDITION_READY, False,
+                            "LeaseExpired", detail)
+        pool = plane.registry.pool
+        if any(s.node == node.name for s in pool.slices):
+            # withdrawal bumps the inventory generation; the next
+            # sync_inventory prunes the mirrored ResourceSlice objects
+            # and their DELETED events requeue every claim holding (or
+            # waiting on) devices of this node — the eviction edge
+            pool.withdraw_node(node.name)
+            plane.sync_inventory()
+            changed = True
+        return changed

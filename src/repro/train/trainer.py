@@ -56,10 +56,17 @@ class CheckpointDriver(KNDDriver):
 class TelemetryDriver(KNDDriver):
     name = "telemetry.repro.dev"
 
-    def __init__(self, straggler_factor: float = 3.0):
+    def __init__(self, straggler_factor: float = 3.0, host: str = ""):
         super().__init__()
         self.steps: List[Dict[str, Any]] = []
         self.straggler_factor = straggler_factor
+        # the host this telemetry daemon reports for (one per node in a
+        # node-plane deployment). Straggler events carry it so the
+        # elastic controller can attribute strikes and escalate the
+        # struck-out host to a node failure; an empty host (the
+        # single-process sim default) only accumulates unattributed
+        # strikes — escalation needs a victim.
+        self.host = host
         self._t0: Optional[float] = None
 
     def register(self, bus: EventBus) -> None:
@@ -82,7 +89,7 @@ class TelemetryDriver(KNDDriver):
             if dt > self.straggler_factor * med:
                 event.context["bus"].publish(
                     Events.STRAGGLER_DETECTED, step=rec["step"],
-                    seconds=dt, median=med)
+                    seconds=dt, median=med, host=self.host)
         return rec
 
 

@@ -73,6 +73,31 @@ def chip_claim(name: str, count: int, selectors=()) -> ResourceClaim:
         topology_scope="cluster"))
 
 
+def make_node_world(side: int = 4, lease_s: float = 0.5, **kwargs):
+    """Deterministic node-plane world: inline plane + threadless agents
+    + a fake wall clock.
+
+    Returns ``(plane, nplane, clock)``. Heartbeats are manual
+    (``agent.renew()``), expiry is ``clock[0] += dt`` — no sleeps, no
+    threads, so same inputs give byte-identical placements.
+    """
+    from repro.node import NodePlane
+
+    cluster, reg = make_tpu_registry(side)
+    plane = ControlPlane(reg, cluster, reconcile_mode="inline", **kwargs)
+    clock = [1000.0]
+    plane.node_clock = lambda: clock[0]
+    nplane = NodePlane(plane, lease_duration_s=lease_s).start(
+        start_threads=False)
+    return plane, nplane, clock
+
+
+def renew_alive(nplane) -> None:
+    """Heartbeat every still-alive agent (the manual-clock harness)."""
+    for agent in nplane.agents.values():
+        agent.renew()
+
+
 # ---------------------------------------------------------------------------
 # Randomized worlds (allocator equivalence + the chaos stress harness)
 # ---------------------------------------------------------------------------

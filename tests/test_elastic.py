@@ -89,6 +89,50 @@ class TestElasticReplan:
         assert ctl.claim.allocated and ctl.claim.prepared
 
 
+class TestStragglerStrikes:
+    def test_host_attributed_strikes_escalate_to_failure(self):
+        """A per-host TelemetryDriver stamps its straggler events; the
+        strike limit escalates the host through the node-failure path."""
+        ctl = make_controller()
+        ctl.plan_mesh()
+        node = ctl.registry.pool.nodes()[0]
+        for step in range(ctl.straggler_strike_limit):
+            ctl.registry.bus.publish(Events.STRAGGLER_DETECTED,
+                                     step=step, host=node)
+        # escalated: the host was withdrawn and the mesh replanned
+        assert node not in ctl.registry.pool.nodes()
+        assert ctl.mesh_shape == (2, 4)
+        assert node not in ctl.strikes          # reset after escalation
+
+    def test_unattributed_strikes_accumulate_without_escalation(self):
+        """The single-process sim's TelemetryDriver has no host
+        identity: strikes land in the 'unknown' bucket and never pick a
+        victim (documented contract, docs/NODES.md)."""
+        ctl = make_controller()
+        ctl.plan_mesh()
+        for step in range(ctl.straggler_strike_limit + 2):
+            ctl.registry.bus.publish(Events.STRAGGLER_DETECTED, step=step)
+        assert ctl.strikes["unknown"] == ctl.straggler_strike_limit + 2
+        assert ctl.mesh_shape == (4, 4)         # nothing failed
+
+    def test_telemetry_driver_stamps_host(self):
+        """TelemetryDriver(host=...) forwards its identity on straggler
+        events — the node-plane deployment contract."""
+        from repro.core.nri import EventBus
+        from repro.train.trainer import TelemetryDriver
+        bus = EventBus()
+        drv = TelemetryDriver(straggler_factor=2.0, host="pod0/host0_0")
+        drv.register(bus)
+        seen = []
+        bus.subscribe(Events.STRAGGLER_DETECTED,
+                      lambda e: seen.append(e.context), "watch")
+        for step in range(9):
+            bus.publish(Events.STEP_BEGIN, step=step, bus=bus)
+            drv._t0 -= 10.0 if step == 8 else 0.01   # step 8 stalls
+            bus.publish(Events.STEP_END, step=step, bus=bus)
+        assert seen and seen[-1]["host"] == "pod0/host0_0"
+
+
 ELASTIC_TRAIN_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"

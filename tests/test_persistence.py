@@ -211,11 +211,85 @@ class TestJournalRecovery:
         journal.attach()
         self._random_ops(store, random.Random(42), journal, rounds=200)
         journal.close()
-        assert journal.snapshots >= 3          # compaction actually ran
-        # old segments were reaped: at most one snapshot + one wal left
+        # compaction actually ran — and mostly as incremental deltas
+        # (only every full_snapshot_every-th compaction rewrites the
+        # full store)
+        assert journal.snapshots + journal.delta_snapshots >= 3
+        assert journal.delta_snapshots >= 1
+        # old segments were reaped: one full snapshot, one wal, and only
+        # the delta chain *after* the newest full snapshot
         files = sorted(os.listdir(tmp_path / "s"))
-        assert len([f for f in files if f.startswith("snapshot-")]) == 1
+        snaps = [f for f in files if f.startswith("snapshot-")]
+        assert len(snaps) == 1
         assert len([f for f in files if f.startswith("wal-")]) == 1
+        full_rv = int(snaps[0].split("-")[1].split(".")[0])
+        for f in files:
+            if f.startswith("delta-"):
+                assert int(f.split("-")[1].split(".")[0]) > full_rv
+        recovered, info = recover_store(str(tmp_path / "s"))
+        assert store_dump_json(recovered) == store_dump_json(store)
+        assert info.deltas_applied == len([f for f in files
+                                           if f.startswith("delta-")])
+
+    def test_delta_chain_recovery_identical(self, tmp_path):
+        """Deltas-only compaction (no interior fulls): snapshot + chain +
+        WAL tail must rebuild the exact store."""
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"), flush_batch=1,
+                               snapshot_every=8, full_snapshot_every=1000)
+        journal.attach()
+        self._random_ops(store, random.Random(7), journal, rounds=160)
+        # leave the window UNFLUSHED: recovery must still see everything
+        # up to the last flushed record
+        journal.close()
+        assert journal.snapshots == 1           # only the attach-time full
+        assert journal.delta_snapshots >= 5
+        recovered, info = recover_store(str(tmp_path / "s"))
+        assert store_dump_json(recovered) == store_dump_json(store)
+        assert info.deltas_applied >= 5
+        assert recovered.resource_version == store.resource_version
+
+    def test_delta_records_deletions(self, tmp_path):
+        """An object deleted between compactions must not resurrect."""
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"), flush_batch=1,
+                               snapshot_every=4, full_snapshot_every=1000)
+        journal.attach()
+        for i in range(4):
+            store.create(chip_claim(f"c{i}", 1))
+        journal.compact()                       # delta with the creates
+        store.delete("ResourceClaim", "c1")
+        store.create(chip_claim("c4", 1))
+        journal.compact()                       # delta with tombstone
+        journal.close()
+        recovered, _ = recover_store(str(tmp_path / "s"))
+        assert recovered.try_get("ResourceClaim", "c1") is None
+        assert recovered.try_get("ResourceClaim", "c4") is not None
+        assert store_dump_json(recovered) == store_dump_json(store)
+
+    def test_delta_compaction_writes_less_than_full(self, tmp_path):
+        """The point of the satellite: compaction cost tracks churn, not
+        store size — a delta after touching one object is far smaller
+        than the full snapshot."""
+        store = ApiStore()
+        journal = StoreJournal(store, str(tmp_path / "s"), flush_batch=1,
+                               full_snapshot_every=1000)
+        journal.attach()
+        for i in range(64):
+            store.create(chip_claim(f"c{i}", 1))
+        journal.compact()                       # delta: 64 objects
+        store.set_condition("ResourceClaim", "c0",
+                            Condition("Allocated", TRUE, reason="x",
+                                      observed_generation=1))
+        journal.compact()                       # delta: 1 object
+        journal.close()
+        files = {f: os.path.getsize(tmp_path / "s" / f)
+                 for f in os.listdir(tmp_path / "s")}
+        deltas = sorted((f, v) for f, v in files.items()
+                        if f.startswith("delta-"))
+        assert len(deltas) == 2
+        full_store, small = deltas[0][1], deltas[-1][1]
+        assert small < full_store / 4, (small, full_store)
         recovered, _ = recover_store(str(tmp_path / "s"))
         assert store_dump_json(recovered) == store_dump_json(store)
 
