@@ -103,7 +103,9 @@ def drip_imperative(nodes: int, devs: int, n_claims: int,
     t0 = time.perf_counter()
     for i in range(n_claims):
         claim = make_claim(f"c-{i:04d}", per_claim)
-        alloc.allocate(claim)
+        # imperative baseline arm: standalone allocator, no plane, no
+        # threads — there is no reconcile lock to take
+        alloc.allocate(claim)  # planelint: disable=lock-discipline
         reg.prepare(claim)
     return time.perf_counter() - t0
 
@@ -139,8 +141,9 @@ def churn_cost_vs_store_size(nodes: int, devs: int, per_claim: int,
             plane.submit(make_claim(name, per_claim))
             plane.reconcile()
             claim = plane.store.get("ResourceClaim", name).spec
-            plane.unprepare(claim)
-            plane.allocator.deallocate(claim)
+            with plane.mutate():    # direct allocator call: out-of-band
+                plane.unprepare(claim)
+                plane.allocator.deallocate(claim)
             plane.store.delete("ResourceClaim", name)
             plane.reconcile()
         dt = time.perf_counter() - t0

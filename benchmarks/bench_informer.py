@@ -115,8 +115,9 @@ class _InlineChurn:
             if self.n >= KEEP_LIVE:
                 victim = f"inline-{self.n - KEEP_LIVE}"
                 claim = plane.store.get("ResourceClaim", victim).spec
-                plane.unprepare(claim)
-                plane.allocator.deallocate(claim)
+                with plane.mutate():    # direct allocator call
+                    plane.unprepare(claim)
+                    plane.allocator.deallocate(claim)
                 plane.store.delete("ResourceClaim", victim)
             self.n += 1
             plane.reconcile()

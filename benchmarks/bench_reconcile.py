@@ -46,10 +46,13 @@ def bench_imperative(reg: DriverRegistry, n: int, reps: int) -> List[float]:
     for i in range(reps):
         claim = chip_claim(f"imp-{n}-{i}", n)
         t0 = time.perf_counter()
-        alloc.allocate(claim)
+        # imperative baseline arm: standalone allocator, no plane, no
+        # threads — there is no reconcile lock to take
+        alloc.allocate(claim)  # planelint: disable=lock-discipline
         reg.prepare(claim)
         out.append(time.perf_counter() - t0)
-        alloc.deallocate(claim)                 # cleanup outside timing
+        # cleanup outside timing
+        alloc.deallocate(claim)  # planelint: disable=lock-discipline
     return out
 
 
@@ -66,8 +69,9 @@ def bench_declarative(plane: ControlPlane, n: int,
         phases = plane.phase_latencies[wname]
         # cleanup outside timing: delete objects, release devices
         claim = plane.store.get("ResourceClaim", cname).spec
-        plane.unprepare(claim)
-        plane.allocator.deallocate(claim)
+        with plane.mutate():            # direct allocator call
+            plane.unprepare(claim)
+            plane.allocator.deallocate(claim)
         plane.store.delete("Workload", wname)
         plane.store.delete("ResourceClaim", cname)
         plane.reconcile()

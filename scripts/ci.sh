@@ -7,6 +7,13 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== planelint: control-plane invariant analyzer (strict) =="
+# AST-level invariant gate (docs/ANALYSIS.md): lock discipline +
+# lock-order acyclicity, codec completeness, condition fixpoints,
+# sync-point cross-check, CEL static validation. Any unsuppressed
+# finding fails CI.
+python scripts/lint.py --strict
+
 echo "== tier-1: pytest (global deadlock guard armed) =="
 # PYTEST_GLOBAL_TIMEOUT (tests/conftest.py): past the budget every
 # thread's stack is dumped via faulthandler and the run hard-exits —
@@ -15,10 +22,13 @@ echo "== tier-1: pytest (global deadlock guard armed) =="
 # tier-1 share scripts/kill_recover_smoke.py as one implementation).
 PYTEST_GLOBAL_TIMEOUT=2400 python -m pytest -x -q
 
-echo "== chaos: informer stress, fixed seed sweep =="
+echo "== chaos: informer stress, fixed seed sweep (lock witness armed) =="
 # the randomized concurrent-churn + fault-injection stress at pinned
-# seeds, with its own tighter deadlock budget
-PYTEST_GLOBAL_TIMEOUT=900 STRESS_SEEDS=7,23,42 \
+# seeds, with its own tighter deadlock budget. LOCK_WITNESS=1 wraps
+# the plane's locks in the runtime lock-order witness (api/chaos.py):
+# the run fails if any observed acquisition order forms a cycle — the
+# dynamic twin of planelint's static lock-order pass.
+PYTEST_GLOBAL_TIMEOUT=900 STRESS_SEEDS=7,23,42 LOCK_WITNESS=1 \
   python -m pytest -x -q tests/test_runtime.py -k stress
 
 echo "== smoke: declarative quickstart (journaled, threaded informer) =="

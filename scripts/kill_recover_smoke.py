@@ -94,8 +94,9 @@ def child(state_dir: str) -> None:
         if i % 5 == 4:      # churn: deletes exercise DELETED WAL records
             victim = f"c-{i - 4:05d}"
             claim = plane.store.get("ResourceClaim", victim).spec
-            plane.unprepare(claim)
-            plane.allocator.deallocate(claim)
+            with plane.mutate():    # direct allocator call: out-of-band
+                plane.unprepare(claim)
+                plane.allocator.deallocate(claim)
             plane.store.delete("ResourceClaim", victim)
             plane.reconcile()
         print(f"ROUND {i}", flush=True)

@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""planelint CLI: run the control-plane invariant checkers.
+
+Usage:
+    python scripts/lint.py                  # human output, exit 0
+    python scripts/lint.py --strict         # exit 1 on any finding (CI)
+    python scripts/lint.py --json           # machine-readable findings
+    python scripts/lint.py --check lock-discipline --check cel-static
+    python scripts/lint.py --list           # available checkers
+
+Suppress a finding at its site with a trailing
+``# planelint: disable=<check>`` comment (or
+``# planelint: disable-file=<check>`` anywhere in the file); see
+docs/ANALYSIS.md.
+"""
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import (CHECKERS, Project, render_human, render_json,
+                            run_checks)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="planelint", description=__doc__)
+    ap.add_argument("--root", default=REPO_ROOT,
+                    help="repo root to analyze (default: this repo)")
+    ap.add_argument("--check", action="append", default=None,
+                    metavar="NAME", help="run only these checkers "
+                    "(repeatable; default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero if any finding survives "
+                    "suppressions (the CI gate)")
+    ap.add_argument("--list", action="store_true",
+                    help="list available checkers and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(CHECKERS):
+            print(name)
+        return 0
+
+    project = Project.discover(args.root)
+    findings = run_checks(project, args.check)
+    print(render_json(findings) if args.json else render_human(findings))
+    return 1 if (args.strict and findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

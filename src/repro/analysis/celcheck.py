@@ -1,0 +1,95 @@
+"""Checker: every CEL selector literal compiles.
+
+Selectors are strings (``'device.attributes["rdma"] == true'``) that
+the allocator compiles only when a claim is actually filtered against
+a device class — which for an example, a config, or a rarely-taken
+driver path may be never in CI. A malformed selector then surfaces as
+a runtime ``CelError`` in exactly the environment least prepared for
+it. This pass finds selector literals at rest and compiles each one
+with the real compiler (:func:`repro.core.cel.compile_expr`) at lint
+time.
+
+Collected sites:
+
+* elements of ``selectors=[...]`` keyword lists (DeviceClass /
+  DeviceRequest construction) — plain strings and f-strings
+  (placeholders are substituted with a neutral token before
+  compiling, so ``f'device.driver == "{self.name}"'`` checks the
+  surrounding grammar);
+* literal first arguments of direct ``compile_expr("...")`` calls.
+
+Scopes: ``src``, ``examples``, ``configs``, ``benchmarks``,
+``scripts``. Tests are excluded — they compile deliberately-invalid
+expressions to exercise error paths.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from .framework import Finding, Project, SourceFile, call_name, register
+
+__all__ = ["check_cel", "literal_of"]
+
+CHECK = "cel-static"
+
+# Token substituted for f-string placeholders. Most placeholders sit
+# inside quoted CEL strings ('... == "{name}"'), where any text works;
+# a bare placeholder becomes this identifier, which is grammatically a
+# plain ident to the compiler.
+_PLACEHOLDER = "X"
+
+
+def literal_of(node: ast.AST) -> Optional[str]:
+    """A compilable string for a Constant or JoinedStr, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts: List[str] = []
+        for v in node.values:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                parts.append(v.value)
+            elif isinstance(v, ast.FormattedValue):
+                parts.append(_PLACEHOLDER)
+            else:
+                return None
+        return "".join(parts)
+    return None
+
+
+def _selector_literals(src: SourceFile) -> List[Tuple[str, int]]:
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "selectors":
+                continue
+            if isinstance(kw.value, (ast.List, ast.Tuple)):
+                for elt in kw.value.elts:
+                    text = literal_of(elt)
+                    if text is not None:
+                        out.append((text, elt.lineno))
+        if call_name(node) == "compile_expr" and node.args:
+            text = literal_of(node.args[0])
+            if text is not None:
+                out.append((text, node.lineno))
+    return out
+
+
+@register(CHECK)
+def check_cel(project: Project) -> Iterable[Finding]:
+    from repro.core.cel import CelError, compile_expr
+    for src in project.scope("src", "examples", "configs", "benchmarks",
+                             "scripts"):
+        if src.parse_error is not None:
+            continue
+        for text, line in _selector_literals(src):
+            try:
+                compile_expr(text)
+            except CelError as e:
+                yield Finding(
+                    CHECK, src.rel, line,
+                    f"CEL selector does not compile: {e} "
+                    f"(expression: {text!r})")

@@ -1,0 +1,89 @@
+"""Checker: every persisted dataclass field has a codec entry.
+
+PR 3's WAL gives durability only to what the codec table knows about:
+``persistence._DATACLASS_CODECS`` maps each type to the tuple of field
+names that survive a crash. A field added to ``api/objects.py`` (or
+``core``) without a codec entry is *silently dropped* on recovery —
+the exact shape of PR 4's template-counter bug, where state the WAL
+never saw evaporated across a restart.
+
+This check imports both modules (no regex scraping) and diffs the
+codec table against ``dataclasses.fields`` per type, both directions:
+
+* a dataclass field missing from its codec tuple → dropped on save;
+* a codec field that no longer exists on the class → ``cls(**fields)``
+  explodes on load (recovery failure);
+* a ``KIND_OF``-registered API kind with no codec at all → the store
+  can hold it but the WAL cannot replay it.
+
+``ResourceClaimTemplate`` is special-cased in ``encode``/``decode``
+(its live ``itertools.count`` needs bespoke handling), mirroring the
+special case in persistence itself. The dynamic twin of this check is
+the all-fields-set round-trip meta-test in tests/test_persistence.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, Optional, Tuple, Type
+
+from .framework import Finding, Project, register
+
+__all__ = ["check_codecs", "codec_gaps"]
+
+CHECK = "codec-completeness"
+
+# Types encode()/decode() handle outside the dataclass table.
+_SPECIAL_CASED = {"ResourceClaimTemplate"}
+
+
+def codec_gaps(codecs: Optional[Dict[str, Tuple[Type[Any],
+                                                Tuple[str, ...]]]] = None,
+               kinds: Optional[Dict[Type[Any], str]] = None
+               ) -> Iterable[Tuple[str, str]]:
+    """Yield (tag-or-kind, problem) pairs; importable by tests as the
+    dynamic twin. ``codecs``/``kinds`` default to the live tables."""
+    if codecs is None or kinds is None:
+        from repro.api import persistence, store
+        if codecs is None:
+            codecs = persistence._DATACLASS_CODECS
+        if kinds is None:
+            kinds = store.KIND_OF
+
+    for tag, (cls, persisted) in sorted(codecs.items()):
+        if not dataclasses.is_dataclass(cls):
+            yield (tag, f"codec target {cls.__name__} is not a dataclass")
+            continue
+        actual = {f.name for f in dataclasses.fields(cls)}
+        for missing in sorted(actual - set(persisted)):
+            yield (tag, f"field {cls.__name__}.{missing} has no codec "
+                        f"entry — silently dropped on WAL save/recovery")
+        for extra in sorted(set(persisted) - actual):
+            yield (tag, f"codec persists {cls.__name__}.{extra} but the "
+                        f"dataclass has no such field — decode "
+                        f"({cls.__name__}(**fields)) fails on recovery")
+        if len(persisted) != len(set(persisted)):
+            yield (tag, "codec field tuple contains duplicates")
+
+    covered = {cls for cls, _ in codecs.values()}
+    for cls, kind in sorted(kinds.items(), key=lambda kv: kv[1]):
+        if cls in covered or cls.__name__ in _SPECIAL_CASED:
+            continue
+        yield (kind, f"API kind {kind!r} ({cls.__name__}) has no codec — "
+                     f"the store admits it but the WAL cannot replay it")
+
+
+@register(CHECK)
+def check_codecs(project: Project) -> Iterable[Finding]:
+    src = project.find("api/persistence.py")
+    rel = src.rel if src is not None else "src/repro/api/persistence.py"
+    try:
+        gaps = list(codec_gaps())
+    except Exception as e:  # pragma: no cover - import breakage
+        yield Finding(CHECK, rel, 0,
+                      f"could not import codec tables: "
+                      f"{type(e).__name__}: {e}")
+        return
+    for tag, problem in gaps:
+        line = src.find_line(f'"{tag}"') if src is not None else 0
+        yield Finding(CHECK, rel, line, f"[{tag}] {problem}")

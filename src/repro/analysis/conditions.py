@@ -1,0 +1,92 @@
+"""Checker: condition messages must be fixpoint-stable.
+
+A controller that writes ``message=f"... {now} ..."`` re-bumps the
+object's watch log on *every* reconcile pass — the message differs
+each evaluation, ``Condition.same_state`` never matches, and the
+level-triggered loop never fixpoints (the reconcile storm PR 5's
+``lease_state`` docstring warns about: "condition messages must be
+stable across re-evaluations").
+
+Heuristic: the ``message=`` argument of ``Controller._set(...)``,
+``Condition(...)`` and ``store.set_condition``'s Condition must not
+interpolate *volatile* values — names/attributes/calls whose very
+point is to differ each time (clocks, uids, randomness, heartbeat
+counters). Durations stamped once at an actual transition (``dt`` in
+the allocation message) are fine and deliberately not in the set.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from .framework import Finding, Project, SourceFile, call_name, register
+
+__all__ = ["check_condition_messages", "VOLATILE_NAMES"]
+
+CHECK = "condition-fixpoint"
+
+# Identifiers whose interpolation into a condition message makes it
+# change on every evaluation.
+VOLATILE_NAMES = frozenset({
+    "now", "age", "uid", "new_uid", "uuid4", "monotonic", "perf_counter",
+    "time", "node_clock", "clock", "random", "renew", "renew_time",
+    "timestamp", "heartbeats",
+})
+
+
+def _volatile_parts(expr: ast.AST) -> List[str]:
+    """Volatile identifiers referenced anywhere inside ``expr``."""
+    out: List[str] = []
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in VOLATILE_NAMES:
+            out.append(node.id)
+        elif isinstance(node, ast.Attribute) and node.attr in VOLATILE_NAMES:
+            out.append(node.attr)
+    return out
+
+
+def _message_arg(node: ast.Call) -> Optional[ast.AST]:
+    """The ``message`` expression of a condition-writing call, if any."""
+    for kw in node.keywords:
+        if kw.arg == "message":
+            return kw.value
+    name = call_name(node)
+    # positional layouts:
+    #   Controller._set(plane, obj, type_, ok, reason, message)
+    #   Condition(type, status, reason, message, ...)
+    if name == "_set" and len(node.args) >= 6:
+        return node.args[5]
+    if name == "Condition" and len(node.args) >= 4:
+        return node.args[3]
+    return None
+
+
+def _scan(src: SourceFile) -> Iterable[Finding]:
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if call_name(node) not in ("_set", "Condition", "set_condition"):
+            continue
+        msg = _message_arg(node)
+        if msg is None:
+            continue
+        # only interpolation can smuggle volatility into a literal
+        if isinstance(msg, (ast.JoinedStr, ast.BinOp, ast.Call, ast.Name,
+                            ast.Attribute)):
+            parts = _volatile_parts(msg)
+            if parts:
+                yield Finding(
+                    CHECK, src.rel, msg.lineno,
+                    f"condition message interpolates volatile value(s) "
+                    f"{sorted(set(parts))} — the message changes every "
+                    f"evaluation, so same_state never matches and the "
+                    f"reconcile loop cannot fixpoint")
+
+
+@register(CHECK)
+def check_condition_messages(project: Project) -> Iterable[Finding]:
+    for src in project.scope("src"):
+        if src.parse_error is not None:
+            continue
+        yield from _scan(src)

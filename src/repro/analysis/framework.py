@@ -1,0 +1,248 @@
+"""planelint: the checker framework.
+
+The control plane's correctness rests on a handful of cross-cutting
+invariants ("store/pool mutations happen under the reconcile lock",
+"every persisted dataclass field has a codec", "condition messages are
+fixpoint-stable") that no single unit test owns. This package turns
+them into AST-level checks that run as a lint gate — the declarative,
+checkable-contract stance the paper takes for networking, applied to
+our own codebase (see docs/ANALYSIS.md).
+
+This module is the plumbing shared by every checker:
+
+* :class:`Finding` — one structured violation (``file:line`` + check
+  name + message), rendered human- or JSON-style.
+* :class:`SourceFile` — a parsed source file with its AST and its
+  suppression comments (``# planelint: disable=<check>``).
+* :class:`Project` — the file universe, bucketed into scopes
+  (``src``, ``tests``, ``benchmarks``, ``scripts``, ``examples``,
+  ``configs``) so each checker can pick the scopes its invariant
+  covers. :meth:`Project.discover` walks a real repo root;
+  :meth:`Project.from_paths` builds a fixture universe for the
+  checker self-tests.
+* :func:`register` / :func:`run_checks` — the checker registry and
+  the runner (which applies suppressions centrally, so no checker has
+  to remember them).
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = ["Finding", "SourceFile", "Project", "register", "run_checks",
+           "CHECKERS", "render_human", "render_json"]
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation: which check, where, and what is wrong.
+
+    ``line == 0`` means "the file as a whole" (used by checks whose
+    subject is a table imported at runtime rather than a syntax node).
+    """
+
+    check: str
+    file: str            # repo-relative path
+    line: int
+    message: str
+    severity: str = "error"
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"check": self.check, "file": self.file, "line": self.line,
+                "message": self.message, "severity": self.severity}
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.check}] {self.message}"
+
+
+# -- suppression comments ----------------------------------------------------
+# Trailing, per-line:   some_call()   # planelint: disable=lock-discipline
+# Whole-file (any line): # planelint: disable-file=cel-static
+# ``all`` suppresses every check. Multiple checks comma-separate.
+_SUPPRESS_RE = re.compile(
+    r"#\s*planelint:\s*(disable|disable-file)=([A-Za-z0-9_,\-]+)")
+
+
+class SourceFile:
+    """A parsed file: text, AST, and its suppression map."""
+
+    def __init__(self, path: Path, rel: str, text: Optional[str] = None):
+        self.path = Path(path)
+        self.rel = rel
+        self.text = self.path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self._tree: Optional[ast.AST] = None
+        self.parse_error: Optional[SyntaxError] = None
+        # line -> suppressed check names; "all" wildcards
+        self.line_suppress: Dict[int, Set[str]] = {}
+        self.file_suppress: Set[str] = set()
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            checks = {c.strip() for c in m.group(2).split(",") if c.strip()}
+            if m.group(1) == "disable-file":
+                self.file_suppress |= checks
+            else:
+                self.line_suppress.setdefault(lineno, set()).update(checks)
+
+    @property
+    def tree(self) -> ast.AST:
+        if self._tree is None:
+            try:
+                self._tree = ast.parse(self.text, filename=str(self.path))
+            except SyntaxError as e:
+                self.parse_error = e
+                self._tree = ast.Module(body=[], type_ignores=[])
+        return self._tree
+
+    def suppressed(self, check: str, line: int) -> bool:
+        if self.file_suppress & {check, "all"}:
+            return True
+        return bool(self.line_suppress.get(line, set()) & {check, "all"})
+
+    def find_line(self, needle: str) -> int:
+        """First line number containing ``needle`` (0 if absent) — lets
+        table-driven checks still point at a real location."""
+        for i, line in enumerate(self.lines, start=1):
+            if needle in line:
+                return i
+        return 0
+
+    def __repr__(self) -> str:
+        return f"SourceFile({self.rel})"
+
+
+_SCOPES = ("src", "tests", "benchmarks", "scripts", "examples", "configs")
+
+
+class Project:
+    """The file universe a lint run sees, bucketed by scope."""
+
+    def __init__(self, root: Path,
+                 files: Dict[str, List[SourceFile]]):
+        self.root = Path(root)
+        self.files: Dict[str, List[SourceFile]] = {
+            scope: list(files.get(scope, ())) for scope in _SCOPES}
+
+    @classmethod
+    def discover(cls, root: Path) -> "Project":
+        root = Path(root)
+        files: Dict[str, List[SourceFile]] = {s: [] for s in _SCOPES}
+        for scope in _SCOPES:
+            base = root / scope
+            if not base.is_dir():
+                continue
+            for path in sorted(base.rglob("*.py")):
+                if "__pycache__" in path.parts:
+                    continue
+                rel = str(path.relative_to(root))
+                files[scope].append(SourceFile(path, rel))
+        return cls(root, files)
+
+    @classmethod
+    def from_paths(cls, root: Path,
+                   by_scope: Dict[str, Sequence[Path]]) -> "Project":
+        """Fixture constructor: explicit file lists per scope."""
+        root = Path(root)
+        files: Dict[str, List[SourceFile]] = {s: [] for s in _SCOPES}
+        for scope, paths in by_scope.items():
+            for path in paths:
+                path = Path(path)
+                try:
+                    rel = str(path.relative_to(root))
+                except ValueError:
+                    rel = path.name
+                files.setdefault(scope, []).append(SourceFile(path, rel))
+        return cls(root, files)
+
+    def scope(self, *names: str) -> List[SourceFile]:
+        out: List[SourceFile] = []
+        for name in names:
+            out.extend(self.files.get(name, ()))
+        return out
+
+    def find(self, rel_suffix: str) -> Optional[SourceFile]:
+        for scope in _SCOPES:
+            for f in self.files[scope]:
+                if f.rel.endswith(rel_suffix):
+                    return f
+        return None
+
+
+# -- registry + runner -------------------------------------------------------
+
+Checker = Callable[[Project], Iterable[Finding]]
+CHECKERS: Dict[str, Checker] = {}
+
+
+def register(name: str) -> Callable[[Checker], Checker]:
+    def deco(fn: Checker) -> Checker:
+        CHECKERS[name] = fn
+        return fn
+    return deco
+
+
+def run_checks(project: Project,
+               names: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run checkers (all by default), drop suppressed findings, sort."""
+    selected = list(names) if names else sorted(CHECKERS)
+    unknown = [n for n in selected if n not in CHECKERS]
+    if unknown:
+        raise KeyError(f"unknown checker(s) {unknown}; "
+                       f"known: {sorted(CHECKERS)}")
+    by_rel: Dict[str, SourceFile] = {}
+    for scope in _SCOPES:
+        for f in project.files[scope]:
+            by_rel[f.rel] = f
+    findings: List[Finding] = []
+    for name in selected:
+        for finding in CHECKERS[name](project):
+            src = by_rel.get(finding.file)
+            if src is not None and src.suppressed(finding.check,
+                                                  finding.line):
+                continue
+            findings.append(finding)
+    return sorted(findings, key=lambda f: (f.file, f.line, f.check,
+                                           f.message))
+
+
+def render_human(findings: Sequence[Finding]) -> str:
+    if not findings:
+        return "planelint: 0 findings"
+    lines = [str(f) for f in findings]
+    lines.append(f"planelint: {len(findings)} finding(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding]) -> str:
+    return json.dumps({"findings": [f.to_dict() for f in findings],
+                       "count": len(findings)}, indent=2)
+
+
+# -- shared AST helpers ------------------------------------------------------
+
+def attr_chain(node: ast.AST) -> List[str]:
+    """``a.b.c`` -> ["a", "b", "c"]; non-name heads contribute nothing."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return list(reversed(parts))
+
+
+def call_name(node: ast.Call) -> str:
+    """Terminal callee name of a Call (``plane.mutate()`` -> "mutate")."""
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""

@@ -1,0 +1,370 @@
+"""Checker: lock discipline + static lock-ordering graph.
+
+Two invariants, both born from PR 4's template-counter bug (a pool
+mutation the WAL never saw because it bypassed the store's locked
+write path):
+
+* **lock-discipline** — raw ``ApiStore``/pool mutations (``_bump``,
+  direct ``.spec``/``.status`` assignment, ``mark_allocated`` /
+  ``release`` / ``withdraw_node`` / allocator ``allocate`` /
+  ``deallocate``) must be lexically reachable only inside a
+  ``with plane.mutate():`` block or a ``with *lock:`` scope.
+  Controllers (class name ending ``Controller``) and the storage/pool
+  layer itself (which owns the locks) are exempt by construction —
+  the check targets *out-of-band* callers: benchmarks, scripts,
+  examples, agents.
+* **lock-order** — a digraph over the plane's lock kinds (reconcile,
+  store, waiters, stats, journal/WAL, ...) built from lexically
+  nested ``with`` blocks plus intraclass ``self.f()`` call
+  resolution. Any cycle is a potential ABBA deadlock and fails the
+  lint. The dynamic twin is :class:`repro.api.chaos.LockOrderWitness`.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .framework import (Finding, Project, SourceFile, attr_chain, call_name,
+                        register)
+
+__all__ = ["check_lock_discipline", "check_lock_order", "lock_kind"]
+
+CHECK = "lock-discipline"
+ORDER_CHECK = "lock-order"
+
+# Pool / store mutations that are unguarded internally and therefore
+# demand an external reconcile-lock (or store-lock) scope.
+_ALWAYS_MUTATING = {"withdraw_node", "mark_allocated", "publish_node",
+                    "_bump"}
+# Mutating only when the receiver is an allocator/pool (``release`` is
+# also a common queue/semaphore verb; ``publish`` is also the event bus).
+_ALLOCATOR_VERBS = {"allocate", "allocate_count", "deallocate", "release"}
+_ALLOCATOR_RECEIVERS = {"allocator", "alloc", "pool"}
+_POOL_ONLY_VERBS = {"publish"}
+
+# Classes that own the locks (their methods ARE the guarded layer) or
+# run exclusively under the reconcile lock by construction.
+_EXEMPT_CLASSES = {"ApiStore", "StoreJournal", "WriteAheadLog",
+                   "ResourcePool", "StructuredAllocator", "LegacyAllocator",
+                   "DriverRegistry", "Watch", "WorkQueue"}
+
+
+def _is_guard(expr: ast.AST) -> bool:
+    """Does this ``with``-item expression acquire a plane lock?"""
+    if isinstance(expr, ast.Call):
+        if call_name(expr) in ("mutate", "installed"):
+            return call_name(expr) == "mutate"
+        # e.g. ``with witness.wrap(...)`` — not a guard
+        return False
+    chain = attr_chain(expr)
+    return bool(chain) and "lock" in chain[-1]
+
+
+def _receiver_names(node: ast.Call) -> Set[str]:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return set(attr_chain(fn.value))
+    return set()
+
+
+def _is_mutation(node: ast.Call) -> Optional[str]:
+    """Return a description if this call mutates pool/store state."""
+    name = call_name(node)
+    if name in _ALWAYS_MUTATING:
+        return name
+    recv = _receiver_names(node)
+    if name in _ALLOCATOR_VERBS and recv & _ALLOCATOR_RECEIVERS:
+        return name
+    if name in _POOL_ONLY_VERBS and "pool" in recv:
+        return name
+    return None
+
+
+class _DisciplineVisitor(ast.NodeVisitor):
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.findings: List[Finding] = []
+        self.class_stack: List[str] = []
+        self.func_stack: List[str] = []
+        self.guard_depth = 0
+
+    # -- scopes ------------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        self.func_stack.append(node.name)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def _exempt(self) -> bool:
+        # ``*_locked`` is the codebase convention for "caller holds the
+        # lock" (e.g. runtime._settle_waiters_locked) — the obligation
+        # moves to the call site, which this lexical pass trusts.
+        if any(f.endswith("_locked") for f in self.func_stack):
+            return True
+        return any(c in _EXEMPT_CLASSES or c.endswith("Controller")
+                   for c in self.class_stack)
+
+    def visit_With(self, node: ast.With) -> None:
+        guards = sum(1 for item in node.items
+                     if _is_guard(item.context_expr))
+        self.guard_depth += guards
+        self.generic_visit(node)
+        self.guard_depth -= guards
+
+    # -- mutations ---------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        desc = _is_mutation(node)
+        if desc and not self.guard_depth and not self._exempt():
+            self.findings.append(Finding(
+                CHECK, self.src.rel, node.lineno,
+                f"pool/store mutation {desc}() outside a "
+                f"reconcile_lock/mutate()/store-lock scope — wrap in "
+                f"`with plane.mutate():` (see docs/ANALYSIS.md)"))
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        if not self.guard_depth and not self._exempt():
+            for tgt in node.targets:
+                # ``obj.spec = ...`` on anything but ``self`` (which is
+                # just a constructor wiring its own attribute)
+                if (isinstance(tgt, ast.Attribute)
+                        and tgt.attr in ("spec", "status")
+                        and attr_chain(tgt.value)[:1] != ["self"]):
+                    self.findings.append(Finding(
+                        CHECK, self.src.rel, node.lineno,
+                        f"direct .{tgt.attr} assignment outside a lock "
+                        f"scope bypasses ApiStore.update_{tgt.attr[:6]} "
+                        f"(generation bump + watch event + WAL)"))
+        self.generic_visit(node)
+
+
+@register(CHECK)
+def check_lock_discipline(project: Project) -> Iterable[Finding]:
+    # Tests get a pass: they reach into internals deliberately
+    # (oracle/invariant assertions on a *stopped* plane).
+    for src in project.scope("src", "benchmarks", "scripts", "examples"):
+        if src.parse_error is not None:
+            yield Finding(CHECK, src.rel, src.parse_error.lineno or 0,
+                          f"syntax error: {src.parse_error.msg}")
+            continue
+        v = _DisciplineVisitor(src)
+        v.visit(src.tree)
+        yield from v.findings
+
+
+# ---------------------------------------------------------------------------
+# Static lock-ordering graph
+# ---------------------------------------------------------------------------
+
+def lock_kind(expr: ast.AST, class_name: Optional[str]) -> Optional[str]:
+    """Classify a ``with``-item expression into a lock kind, or None.
+
+    The kinds mirror the runtime witness: ``reconcile`` (the plane-wide
+    reconcile lock, incl. ``mutate()``), ``store`` (ApiStore RLock),
+    ``waiters``/``stats`` (runtime side-locks). Unrecognized ``*lock*``
+    names become class-qualified leaf kinds so unrelated private locks
+    (FaultInjector, TokenBucket) never alias each other.
+    """
+    if isinstance(expr, ast.Call):
+        return "reconcile" if call_name(expr) == "mutate" else None
+    chain = attr_chain(expr)
+    if not chain:
+        return None
+    term = chain[-1]
+    if "lock" not in term:
+        return None
+    if term == "reconcile_lock":
+        return "reconcile"
+    if term == "_waiters_lock":
+        return "waiters"
+    if term == "_stats_lock":
+        return "stats"
+    if term in ("lock", "_lock"):
+        if len(chain) >= 2 and chain[-2] == "store":
+            return "store"
+        if class_name == "ApiStore":
+            return "store"
+        if class_name == "ControlPlaneRuntime" and term == "lock":
+            return "reconcile"
+        if class_name == "WriteAheadLog":
+            return "wal"
+        if class_name == "StoreJournal":
+            return "journal"
+    return f"{class_name}.{term}" if class_name else term
+
+
+class _OrderVisitor(ast.NodeVisitor):
+    """Per-function lock acquisitions + same-class call sites."""
+
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.class_stack: List[Optional[str]] = []
+        self.func_stack: List[str] = []
+        self.held: List[str] = []
+        # (class, func) -> [(held_tuple, kind, line)]
+        self.acquires: Dict[Tuple[Optional[str], str],
+                            List[Tuple[Tuple[str, ...], str, int]]] = {}
+        # (class, func) -> [(held_tuple, callee_name)]
+        self.calls: Dict[Tuple[Optional[str], str],
+                         List[Tuple[Tuple[str, ...], str]]] = {}
+
+    def _key(self) -> Tuple[Optional[str], str]:
+        cls = self.class_stack[-1] if self.class_stack else None
+        fn = self.func_stack[-1] if self.func_stack else "<module>"
+        return (cls, fn)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.class_stack.append(node.name)
+        self.generic_visit(node)
+        self.class_stack.pop()
+
+    def _visit_func(self, node) -> None:
+        self.func_stack.append(node.name)
+        saved, self.held = self.held, []
+        self.generic_visit(node)
+        self.held = saved
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_With(self, node: ast.With) -> None:
+        cls = self.class_stack[-1] if self.class_stack else None
+        acquired: List[str] = []
+        for item in node.items:
+            kind = lock_kind(item.context_expr, cls)
+            if kind is not None:
+                self.acquires.setdefault(self._key(), []).append(
+                    (tuple(self.held + acquired), kind, node.lineno))
+                acquired.append(kind)
+        self.held.extend(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        del self.held[len(self.held) - len(acquired):]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # ``self.f()`` / bare ``f()`` — resolvable within the same
+        # class/module, used to propagate held locks across calls.
+        fn = node.func
+        if (isinstance(fn, ast.Attribute)
+                and isinstance(fn.value, ast.Name)
+                and fn.value.id == "self"):
+            self.calls.setdefault(self._key(), []).append(
+                (tuple(self.held), fn.attr))
+        elif isinstance(fn, ast.Name):
+            self.calls.setdefault(self._key(), []).append(
+                (tuple(self.held), fn.id))
+        self.generic_visit(node)
+
+
+def _lock_graph(project: Project
+                ) -> Tuple[Dict[str, Set[str]],
+                           Dict[Tuple[str, str], Tuple[str, int]]]:
+    """Edge map kind->kinds + a sample (file, line) per edge."""
+    edges: Dict[str, Set[str]] = {}
+    samples: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    acquires: Dict[Tuple[Optional[str], str],
+                   List[Tuple[Tuple[str, ...], str, int, str]]] = {}
+    calls: Dict[Tuple[Optional[str], str],
+                List[Tuple[Tuple[str, ...], str]]] = {}
+    for src in project.scope("src"):
+        if src.parse_error is not None:
+            continue
+        v = _OrderVisitor(src)
+        v.visit(src.tree)
+        for key, acqs in v.acquires.items():
+            acquires.setdefault(key, []).extend(
+                (held, kind, line, src.rel) for held, kind, line in acqs)
+        for key, cs in v.calls.items():
+            calls.setdefault(key, []).extend(cs)
+
+    def add_edge(held: Iterable[str], kind: str, rel: str,
+                 line: int) -> bool:
+        changed = False
+        for h in held:
+            if h == kind:
+                continue            # reentrant re-acquire: not an edge
+            if kind not in edges.setdefault(h, set()):
+                edges[h].add(kind)
+                samples[(h, kind)] = (rel, line)
+                changed = True
+        return changed
+
+    for key, acqs in acquires.items():
+        for held, kind, line, rel in acqs:
+            add_edge(held, kind, rel, line)
+
+    # Intraclass/intramodule call resolution to a fixpoint: a method
+    # acquiring B, called while A is held, yields A -> B.
+    by_name: Dict[Tuple[Optional[str], str],
+                  List[Tuple[Tuple[str, ...], str, int, str]]] = acquires
+    changed = True
+    rounds = 0
+    while changed and rounds < 10:
+        changed = False
+        rounds += 1
+        for key, cs in calls.items():
+            cls = key[0]
+            for held, callee in cs:
+                if not held:
+                    continue
+                callee_acqs = (by_name.get((cls, callee))
+                               or by_name.get((None, callee)) or [])
+                for inner_held, kind, line, rel in callee_acqs:
+                    if add_edge(list(held) + list(inner_held), kind,
+                                rel, line):
+                        changed = True
+    return edges, samples
+
+
+def _find_cycle(edges: Dict[str, Set[str]]) -> Optional[List[str]]:
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color: Dict[str, int] = {}
+    stack: List[str] = []
+
+    def dfs(node: str) -> Optional[List[str]]:
+        color[node] = GRAY
+        stack.append(node)
+        for nxt in sorted(edges.get(node, ())):
+            c = color.get(nxt, WHITE)
+            if c == GRAY:
+                return stack[stack.index(nxt):] + [nxt]
+            if c == WHITE:
+                cyc = dfs(nxt)
+                if cyc:
+                    return cyc
+        stack.pop()
+        color[node] = BLACK
+        return None
+
+    for node in sorted(edges):
+        if color.get(node, WHITE) == WHITE:
+            cyc = dfs(node)
+            if cyc:
+                return cyc
+    return None
+
+
+@register(ORDER_CHECK)
+def check_lock_order(project: Project) -> Iterable[Finding]:
+    edges, samples = _lock_graph(project)
+    cycle = _find_cycle(edges)
+    if cycle is None:
+        return
+    pairs = list(zip(cycle, cycle[1:]))
+    where = "; ".join(
+        f"{a}->{b} at {samples[(a, b)][0]}:{samples[(a, b)][1]}"
+        for a, b in pairs if (a, b) in samples)
+    rel, line = samples.get(pairs[0], ("", 0))
+    yield Finding(ORDER_CHECK, rel or "src", line,
+                  f"lock-order cycle {' -> '.join(cycle)} ({where}) — "
+                  f"a schedule acquiring these in opposite orders "
+                  f"deadlocks")

@@ -1,0 +1,129 @@
+"""Checker: sync-point names line up between source and tests.
+
+The chaos machinery is string-keyed: production paths call
+``sync_point("store.write")`` and tests steer the injector with
+``delay_points=("store.",)`` / ``kill_points=("runtime.worker.",)``.
+A typo on either side fails *silently* — the delay never fires, the
+kill never lands, and the stress test quietly stops testing what it
+claims to. This pass cross-checks all four directions:
+
+* every name in ``SYNC_POINTS`` (api/chaos.py) is actually fired
+  somewhere in ``src/``;
+* every ``sync_point(...)`` call in ``src/`` uses a declared name;
+* every name/prefix referenced from tests (``sync_point``/``fire``
+  call args, ``delay_points=``/``kill_points=`` tuples) matches at
+  least one declared point;
+* the declaration table itself parses (a malformed tuple is a finding,
+  not a crash).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set, Tuple
+
+from .framework import Finding, Project, SourceFile, call_name, register
+
+__all__ = ["check_sync_points", "declared_sync_points"]
+
+CHECK = "sync-points"
+
+
+def declared_sync_points(chaos_src: SourceFile
+                         ) -> Optional[Tuple[str, ...]]:
+    """The SYNC_POINTS tuple literal from api/chaos.py, or None."""
+    for node in ast.walk(chaos_src.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Name) and tgt.id == "SYNC_POINTS":
+                if isinstance(node.value, (ast.Tuple, ast.List)):
+                    names = []
+                    for elt in node.value.elts:
+                        if (isinstance(elt, ast.Constant)
+                                and isinstance(elt.value, str)):
+                            names.append(elt.value)
+                    return tuple(names)
+    return None
+
+
+def _fired_points(src: SourceFile) -> List[Tuple[str, int]]:
+    """First-arg string literals of sync_point()/fire() calls."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(src.tree):
+        if (isinstance(node, ast.Call)
+                and call_name(node) in ("sync_point", "fire")
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            out.append((node.args[0].value, node.lineno))
+    return out
+
+
+def _referenced_patterns(src: SourceFile) -> List[Tuple[str, int]]:
+    """Names/prefixes from delay_points=/kill_points= keyword tuples."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(src.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg not in ("delay_points", "kill_points"):
+                continue
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                for elt in kw.value.elts:
+                    if (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, str)):
+                        out.append((elt.value, elt.lineno))
+    return out
+
+
+@register(CHECK)
+def check_sync_points(project: Project) -> Iterable[Finding]:
+    chaos_src = project.find("api/chaos.py") or project.find("chaos.py")
+    if chaos_src is None:
+        return
+    declared = declared_sync_points(chaos_src)
+    if declared is None:
+        yield Finding(CHECK, chaos_src.rel, 0,
+                      "SYNC_POINTS tuple not found / not a literal tuple "
+                      "of strings")
+        return
+
+    fired: Set[str] = set()
+    for src in project.scope("src"):
+        if src.parse_error is not None:
+            continue
+        for name, line in _fired_points(src):
+            fired.add(name)
+            if name not in declared:
+                yield Finding(
+                    CHECK, src.rel, line,
+                    f"sync_point {name!r} is fired but not declared in "
+                    f"SYNC_POINTS (api/chaos.py) — injectors can never "
+                    f"be documented/steered against it")
+    for name in declared:
+        if name not in fired:
+            yield Finding(
+                CHECK, chaos_src.rel, chaos_src.find_line(f'"{name}"'),
+                f"SYNC_POINTS declares {name!r} but nothing in src/ "
+                f"fires it — dead chaos surface (or a renamed call "
+                f"site)")
+
+    # references: exact names or prefixes, from tests AND from src
+    # defaults (FaultInjector's own delay_points tuple)
+    for src in project.scope("tests", "src", "benchmarks", "scripts"):
+        if src.parse_error is not None:
+            continue
+        refs = list(_referenced_patterns(src))
+        if src is not chaos_src and src.rel.startswith("tests"):
+            refs.extend(_fired_points(src))
+        for pattern, line in refs:
+            if pattern in declared:
+                continue
+            if any(p.startswith(pattern) for p in declared):
+                continue
+            yield Finding(
+                CHECK, src.rel, line,
+                f"{pattern!r} matches no declared sync point "
+                f"(SYNC_POINTS in api/chaos.py) — the fault it is "
+                f"meant to steer will silently never fire")

@@ -50,13 +50,14 @@ Known sync points (prefix-matchable, e.g. ``"store."`` hits all three):
 from __future__ import annotations
 
 import random
+import sys
 import threading
 import time
 from contextlib import contextmanager
-from typing import Dict, Iterable, Iterator, Optional, Tuple
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
 __all__ = ["FaultInjector", "InjectedFault", "sync_point", "install",
-           "installed", "SYNC_POINTS"]
+           "installed", "SYNC_POINTS", "LockOrderWitness"]
 
 SYNC_POINTS = (
     "store.create", "store.write",
@@ -162,3 +163,195 @@ def installed(injector: FaultInjector) -> Iterator[FaultInjector]:
         yield injector
     finally:
         install(prev)
+
+
+# ---------------------------------------------------------------------------
+# Lock-order witness: the dynamic twin of planelint's static lock graph
+# ---------------------------------------------------------------------------
+
+class _TracedLock:
+    """A lock proxy that reports acquisition order to its witness.
+
+    Wraps an ``RLock``/``Lock`` with the same acquire/release/context
+    protocol. The edge is recorded *before* blocking on the inner lock,
+    so an order violation is witnessed even on the schedule where it
+    deadlocks. Reentrant re-acquisition is counted, not re-reported.
+    """
+
+    __slots__ = ("_witness", "name", "_inner")
+
+    def __init__(self, witness: "LockOrderWitness", name: str, inner):
+        self._witness = witness
+        self.name = name
+        self._inner = inner
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        self._witness._before_acquire(self.name)
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._witness._acquired(self.name)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._witness._released(self.name)
+
+    def __enter__(self) -> "_TracedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"_TracedLock({self.name}, {self._inner!r})"
+
+
+class LockOrderWitness:
+    """Records actual lock-acquisition orders; fails on observed cycles.
+
+    planelint's ``lock-order`` pass proves the *lexical* nesting of
+    plane locks is acyclic; this witness checks the claim at runtime
+    during chaos stress, where interprocedural paths the static pass
+    cannot see (callbacks, watch hooks, worker hand-offs) are actually
+    scheduled. Wrap the plane's locks before constructing the runtime
+    (``ControlPlaneRuntime.__init__`` captures ``reconcile_lock`` by
+    reference)::
+
+        witness = LockOrderWitness()
+        witness.attach_plane(plane)
+        rt = ControlPlaneRuntime(plane)
+        witness.attach_runtime(rt)
+        ...
+        witness.assert_acyclic()
+
+    An edge ``A -> B`` means some thread acquired B while holding A.
+    A cycle means two schedules can acquire the same pair in opposite
+    orders — an ABBA deadlock waiting for the right interleaving.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._held = threading.local()          # name -> reentrancy count
+        # (holder, acquired) -> observation count
+        self.edges: Dict[Tuple[str, str], int] = {}
+        # first call site observed per edge: "thread @ file:line"
+        self.sites: Dict[Tuple[str, str], str] = {}
+        self.acquisitions = 0
+
+    # -- wrapping ----------------------------------------------------------
+    def wrap(self, name: str, lock) -> _TracedLock:
+        if isinstance(lock, _TracedLock):
+            return lock
+        return _TracedLock(self, name, lock)
+
+    def attach_plane(self, plane) -> "LockOrderWitness":
+        """Wrap the plane-wide locks (reconcile + store). Must run
+        before a ControlPlaneRuntime is constructed on the plane."""
+        plane.reconcile_lock = self.wrap("reconcile", plane.reconcile_lock)
+        plane.store._lock = self.wrap("store", plane.store._lock)
+        return self
+
+    def attach_runtime(self, rt) -> "LockOrderWitness":
+        """Wrap the runtime's side locks (waiters/stats bookkeeping)."""
+        rt._waiters_lock = self.wrap("waiters", rt._waiters_lock)
+        rt._stats_lock = self.wrap("stats", rt._stats_lock)
+        return self
+
+    # -- bookkeeping (called from _TracedLock) -----------------------------
+    def _counts(self) -> Dict[str, int]:
+        counts = getattr(self._held, "counts", None)
+        if counts is None:
+            counts = self._held.counts = {}
+        return counts
+
+    def _before_acquire(self, name: str) -> None:
+        counts = self._counts()
+        if counts.get(name):
+            return                              # reentrant: no new edge
+        held = [n for n, c in counts.items() if c]
+        if not held:
+            return
+        site = None
+        with self._lock:
+            for h in held:
+                edge = (h, name)
+                n = self.edges.get(edge, 0)
+                self.edges[edge] = n + 1
+                if n == 0:
+                    if site is None:
+                        site = self._call_site()
+                    self.sites[edge] = site
+
+    def _acquired(self, name: str) -> None:
+        counts = self._counts()
+        counts[name] = counts.get(name, 0) + 1
+        self.acquisitions += 1
+
+    def _released(self, name: str) -> None:
+        counts = self._counts()
+        n = counts.get(name, 0) - 1
+        if n <= 0:
+            counts.pop(name, None)
+        else:
+            counts[name] = n
+
+    @staticmethod
+    def _call_site() -> str:
+        frame = sys._getframe(2)
+        while frame is not None and frame.f_code.co_filename == __file__:
+            frame = frame.f_back
+        if frame is None:                        # pragma: no cover
+            return threading.current_thread().name
+        return (f"{threading.current_thread().name} @ "
+                f"{frame.f_code.co_filename}:{frame.f_lineno}")
+
+    # -- verdict -----------------------------------------------------------
+    def cycles(self) -> List[List[str]]:
+        """Every distinct cycle in the observed order graph."""
+        adj: Dict[str, Set[str]] = {}
+        with self._lock:
+            for a, b in self.edges:
+                adj.setdefault(a, set()).add(b)
+        out: List[List[str]] = []
+        state: Dict[str, int] = {}
+        stack: List[str] = []
+
+        def dfs(node: str) -> None:
+            state[node] = 1
+            stack.append(node)
+            for nxt in sorted(adj.get(node, ())):
+                if state.get(nxt, 0) == 1:
+                    out.append(stack[stack.index(nxt):] + [nxt])
+                elif state.get(nxt, 0) == 0:
+                    dfs(nxt)
+            stack.pop()
+            state[node] = 2
+
+        for node in sorted(adj):
+            if state.get(node, 0) == 0:
+                dfs(node)
+        return out
+
+    def assert_acyclic(self) -> None:
+        found = self.cycles()
+        if not found:
+            return
+        detail = []
+        for cyc in found:
+            for a, b in zip(cyc, cyc[1:]):
+                detail.append(f"  {a} -> {b}: seen "
+                              f"{self.edges.get((a, b), 0)}x, first at "
+                              f"{self.sites.get((a, b), '?')}")
+        raise AssertionError(
+            "lock-order cycle observed at runtime (ABBA deadlock "
+            "candidate): " + " | ".join("->".join(c) for c in found)
+            + "\n" + "\n".join(detail))
+
+    def summary(self) -> Dict[str, object]:
+        cycles = ["->".join(c) for c in self.cycles()]
+        with self._lock:
+            return {"acquisitions": self.acquisitions,
+                    "edges": {f"{a}->{b}": n
+                              for (a, b), n in sorted(self.edges.items())},
+                    "cycles": cycles}

@@ -598,7 +598,17 @@ class ControlPlane:
         strips :class:`~repro.api.persistence.Unpersisted` output markers
         so derived artifacts (plan, mesh) are rebuilt by the
         AttachmentController — deterministically, from the same seed.
+
+        Holds the reconcile lock: recovery normally runs before any
+        informer exists, but the pool bookkeeping rebuilt here is the
+        same state live reconciles guard, so adoption stays safe even
+        against an already-attached runtime (the lock is reentrant for
+        the inline path).
         """
+        with self.reconcile_lock:
+            return self._adopt_locked()
+
+    def _adopt_locked(self) -> Dict[str, int]:
         from .persistence import Unpersisted, _count_value
         self.registry.run_discovery()
         self.sync_inventory()

@@ -603,6 +603,13 @@ class ControlPlaneRuntime:
                 if self.limiter is not None:
                     self.limiter.acquire(self._stop)
                 self._reconcile_key(key)
+            except (AssertionError, KeyboardInterrupt) as e:
+                # a failed test assertion (or ^C) must FAIL the runtime,
+                # not masquerade as one more survivable worker panic that
+                # a restart quietly absorbs
+                self._panic(key, e)
+                self._fail_runtime(e)
+                return
             except BaseException as e:  # noqa: BLE001 - panic path
                 self._panic(key, e)
                 return          # thread dies (quietly — the panic is

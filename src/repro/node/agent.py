@@ -132,6 +132,11 @@ class NodeAgent:
             # chaos kill: die exactly like a SIGKILL'd daemon — no
             # deregistration, no final renewal
             self._killed.set()
+        except (AssertionError, KeyboardInterrupt):
+            # test assertions and ^C must surface, not be absorbed as
+            # "the agent died" (which the lease machinery would mask)
+            self._killed.set()
+            raise
         except Exception:  # noqa: BLE001 - a dead agent IS the scenario
             self._killed.set()
 

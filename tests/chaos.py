@@ -96,6 +96,7 @@ class StressResult:
     replicas_stamped: int = 0          # template-owned claims
     injector: Optional[dict] = None
     stats: Optional[object] = None
+    witness: Optional[dict] = None     # lock-order witness summary
 
     def outcome(self) -> Tuple:
         """The comparable core (oracle equivalence)."""
@@ -196,11 +197,18 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
                delay_prob: float = 0.08, max_delay_s: float = 0.002,
                state_dir: Optional[str] = None,
                quiesce_timeout: float = 90.0,
-               deadline_s: float = 150.0) -> Tuple[StressResult, ControlPlane]:
+               deadline_s: float = 150.0,
+               witness: Optional[bool] = None
+               ) -> Tuple[StressResult, ControlPlane]:
     """Drive the randomized concurrent scenario; return (result, plane).
 
     The plane is returned *stopped* (runtime joined, journal synced) so
     callers can run invariants and WAL recovery checks against it.
+
+    ``witness`` (default: the ``LOCK_WITNESS`` env var) wraps the
+    plane's locks in a :class:`~repro.api.chaos.LockOrderWitness` and
+    asserts the observed acquisition orders stayed acyclic — the
+    dynamic twin of planelint's static ``lock-order`` pass.
 
     Sizing invariant: the worst-case concurrent load (every claim of
     every thread live at once, before its delete lands, plus template
@@ -210,6 +218,13 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
     capacity, *which* claims allocate never depends on thread order.
     """
     plane = make_tpu_plane(side=side, state_dir=state_dir)
+    if witness is None:
+        witness = os.environ.get("LOCK_WITNESS", "") not in ("", "0")
+    order_witness = None
+    if witness:
+        # must wrap BEFORE the runtime exists: ControlPlaneRuntime
+        # captures plane.reconcile_lock by reference in __init__
+        order_witness = chaos_hooks.LockOrderWitness().attach_plane(plane)
     injector = FaultInjector(seed=seed, delay_prob=delay_prob,
                              max_delay_s=max_delay_s, kill_prob=kill_prob,
                              max_kills=max_kills)
@@ -251,9 +266,12 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
 
     with watchdog(deadline_s, note=f"stress seed={seed}"):
         with chaos_hooks.installed(injector):
-            with ControlPlaneRuntime(plane, workers_per_kind=2,
-                                     max_worker_restarts=4 * max_kills,
-                                     poll_interval_s=0.005) as rt:
+            runtime = ControlPlaneRuntime(plane, workers_per_kind=2,
+                                          max_worker_restarts=4 * max_kills,
+                                          poll_interval_s=0.005)
+            if order_witness is not None:
+                order_witness.attach_runtime(runtime)
+            with runtime as rt:
                 threads = [threading.Thread(target=submitter, args=(t,),
                                             name=f"submitter-{t}")
                            for t in range(n_threads)]
@@ -275,6 +293,11 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
                 result = snapshot(plane, seed)
                 result.injector = injector.summary()
                 result.stats = rt.stats
+    if order_witness is not None:
+        assert order_witness.acquisitions > 0, \
+            "lock witness attached but saw no acquisitions"
+        order_witness.assert_acyclic()
+        result.witness = order_witness.summary()
     return result, plane
 
 

@@ -702,3 +702,149 @@ class TestAdmission:
         cond = plane.store.get("ResourceClaim", "big") \
             .condition(CONDITION_ALLOCATED)
         assert cond.reason == "Unsatisfiable"
+
+
+# ---------------------------------------------------------------------------
+# Codec completeness meta-test (dynamic twin of planelint's
+# codec-completeness checker): every registered codec type, constructed
+# with EVERY persisted field set to a non-default value, must round-trip
+# byte-identically through encode/decode. A field someone adds to a
+# dataclass without extending its codec tuple fails the static checker;
+# a codec that silently mangles a populated field fails here.
+# ---------------------------------------------------------------------------
+
+def _all_fields_samples():
+    """One fully-populated instance per _DATACLASS_CODECS tag."""
+    from repro.core import (AllocationResult, Device, DeviceClass,
+                            DeviceRef, NetworkDeviceData, ResourceSlice)
+    from repro.core.attributes import AttributeSet, Quantity, Version
+    from repro.core.claims import AllocatedDevice
+    from repro.core.oci import AttachmentSpec, DeviceBinding
+    from repro.api.objects import Condition as Cond, Lease, Node, ObjectMeta
+
+    ref = DeviceRef(driver="tpu.google.com", pool="pod0",
+                    name="chip_1_2", node="host-3")
+    ad = AllocatedDevice(request="chips", ref=ref)
+    ndd = NetworkDeviceData(interface_name="eth1",
+                            ips=["10.0.0.7/24", "fd00::7/64"],
+                            hardware_address="aa:bb:cc:dd:ee:07")
+    req = DeviceRequest(name="chips", device_class="tpu.google.com",
+                        selectors=['device.attributes["generation"] == "v5e"'],
+                        count=3, allocation_mode="All")
+    spec = ClaimSpec(requests=[req],
+                     constraints=[MatchAttribute(
+                         attribute="tpu.google.com/host",
+                         requests=["chips"])],
+                     config=[DeviceConfig(driver="tpu.google.com",
+                                          parameters={"mtu": 9000})],
+                     topology_scope="cluster")
+    dev = Device(name="chip_1_2",
+                 attributes=AttributeSet({
+                     "tpu.google.com/version": Version(5, 1, 2),
+                     "tpu.google.com/hbm": Quantity.parse("16Gi"),
+                     "index": 7, "healthy": True}),
+                 capacity={"hbm": Quantity.parse("16Gi")},
+                 driver="tpu.google.com", pool="pod0", node="host-3")
+    binding = DeviceBinding(device_id="pod0/chip_1_2", mesh_coord=(1, 2),
+                            attrs={"ici": "x"})
+    return {
+        "DeviceRef": ref,
+        "AllocatedDevice": ad,
+        "NetworkDeviceData": ndd,
+        "AllocationResult": AllocationResult(
+            devices=[ad], node="host-3",
+            device_statuses={"chips": ndd}),
+        "DeviceConfig": DeviceConfig(driver="dcn", parameters={"qp": 4}),
+        "MatchAttribute": MatchAttribute(attribute="pod",
+                                         requests=["chips", "nics"]),
+        "DeviceRequest": req,
+        "ClaimSpec": spec,
+        "ResourceClaim": ResourceClaim(
+            name="c-meta", spec=spec, uid="uid-123",
+            allocation=AllocationResult(devices=[ad], node="host-3"),
+            prepared=True, reserved_for=["job-1", "job-2"]),
+        "DeviceClass": DeviceClass(
+            name="tpu.google.com",
+            selectors=['device.driver == "tpu.google.com"'],
+            config=[DeviceConfig(driver="tpu.google.com",
+                                 parameters={"topo": "2x2"})]),
+        "Device": dev,
+        "ResourceSlice": ResourceSlice(driver="tpu.google.com", pool="pod0",
+                                       node="host-3", devices=[dev],
+                                       generation=4),
+        # claim XOR claim_template: __post_init__ forbids both set, so
+        # "all fields set" means every *settable-together* field
+        "Workload": Workload(claim="c-meta", axes=[AxisSpec("data", 2, "y")],
+                             placement="compact", seed=11, role="serve",
+                             replicas=3, build_mesh=False),
+        "Node": Node(name="host-3", provider="agent-host-3-xyz",
+                     unschedulable=True, pod=2),
+        "Lease": Lease(name="host-3", holder="agent-host-3-xyz",
+                       duration_s=0.75, acquired=123.25),
+        "AxisSpec": AxisSpec("model", 4, "x"),
+        "Condition": Cond(type="Ready", status="True", reason="Adopted",
+                          message="3 device(s)", observed_generation=6,
+                          last_transition=42.5),
+        "ObjectMeta": ObjectMeta(name="c-meta", kind="ResourceClaim",
+                                 uid="uid-123", resource_version=9,
+                                 generation=3, labels={"workload": "w"},
+                                 created=41.5),
+        "DeviceBinding": binding,
+        "AttachmentSpec": AttachmentSpec(axis_names=("data", "model"),
+                                         axis_shape=(1, 1),
+                                         bindings=[binding],
+                                         metadata={"fingerprint": "f00"}),
+    }
+
+
+class TestCodecAllFieldsMeta:
+    def test_every_codec_tag_has_a_sample(self):
+        from repro.api.persistence import _DATACLASS_CODECS
+        samples = _all_fields_samples()
+        assert set(samples) == set(_DATACLASS_CODECS), \
+            "add an all-fields sample for every new codec entry"
+
+    # fields that CANNOT be non-default alongside the rest of their
+    # sample: Workload admission enforces claim XOR claim_template
+    ALLOWED_DEFAULTS = {"Workload": {"claim_template"}}
+
+    def test_samples_set_every_persisted_field(self):
+        import dataclasses
+        from repro.api.persistence import _DATACLASS_CODECS
+        samples = _all_fields_samples()
+        for tag, sample in samples.items():
+            cls, fields = _DATACLASS_CODECS[tag]
+            assert type(sample) is cls
+            for f in dataclasses.fields(cls):
+                if f.name not in fields:
+                    continue
+                if f.name in self.ALLOWED_DEFAULTS.get(tag, ()):
+                    continue
+                default = (f.default if f.default
+                           is not dataclasses.MISSING else
+                           f.default_factory() if f.default_factory
+                           is not dataclasses.MISSING else
+                           dataclasses.MISSING)
+                assert getattr(sample, f.name) != default, \
+                    (f"{tag}.{f.name} left at its default — the "
+                     f"round-trip would not exercise it")
+
+    def test_byte_identical_round_trip(self):
+        import json
+        from repro.api.persistence import _DATACLASS_CODECS
+        samples = _all_fields_samples()
+        for tag, sample in samples.items():
+            first = json.dumps(encode(sample), sort_keys=True)
+            back = decode(encode(sample))
+            second = json.dumps(encode(back), sort_keys=True)
+            assert first == second, f"{tag}: re-encode differs"
+            _, fields = _DATACLASS_CODECS[tag]
+            for name in fields:
+                assert getattr(back, name) == getattr(sample, name), \
+                    f"{tag}.{name} mutated across the round-trip"
+
+    def test_static_checker_agrees(self):
+        # the analyzer's codec pass over the live tables must be as
+        # green as this dynamic test (they are twins)
+        from repro.analysis.codecs import codec_gaps
+        assert list(codec_gaps()) == []
