@@ -1,0 +1,207 @@
+"""Rollout-plane bench: rolling-update cost and canary rollback latency.
+
+Three sections:
+
+* **rolling** — wall time to roll a replica set to a new revision at
+  several (max_surge, max_unavailable) strategies, plus the *observed*
+  peak unavailability and peak surge from a store-journal witness (the
+  same per-event accounting the chaos tests assert on): the measured
+  bounds must match the declared strategy.
+* **drain** — budget-aware node drain latency: seconds from the drain
+  spec edit to Drained=True with every evicted claim re-placed.
+* **canary** — rollback latency: seconds from the SLO breach landing in
+  status to the workload spec byte-identically restored (plus the
+  claim-set convergence that follows).
+
+  PYTHONPATH=src python -m benchmarks.bench_rollout [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+
+def _template(count: int = 1):
+    from repro.core import ClaimSpec, DeviceRequest, ResourceClaimTemplate
+    return ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips",
+                                device_class="tpu.google.com", count=count)],
+        topology_scope="cluster"))
+
+
+def _plane(side: int):
+    from repro.api import ControlPlane
+    from repro.core import DriverRegistry, IciDriver, TpuDriver
+    from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster, reconcile_mode="inline")
+    plane.run_discovery()
+    return plane
+
+
+class _BoundsWitness:
+    """Journal hook recording peak surge / peak unavailability per event."""
+
+    def __init__(self, workload: str, replicas: int) -> None:
+        self.workload = workload
+        self.replicas = replicas
+        self.claims: Dict[str, bool] = {}
+        self.peak_total = 0
+        self.min_ready: Optional[int] = None
+        self._armed = False
+
+    def arm(self) -> None:
+        """Start recording (after initial converge, before the roll)."""
+        self._armed = True
+        self.peak_total = len(self.claims)
+        self.min_ready = sum(self.claims.values())
+
+    def __call__(self, event) -> None:
+        from repro.rollout.strategy import claim_ready
+        if event.kind != "ResourceClaim":
+            return
+        if event.type == "DELETED":
+            self.claims.pop(event.name, None)
+        elif event.object.meta.labels.get("workload") == self.workload:
+            self.claims[event.name] = claim_ready(event.object)
+        else:
+            return
+        if self._armed:
+            self.peak_total = max(self.peak_total, len(self.claims))
+            ready = sum(self.claims.values())
+            self.min_ready = (ready if self.min_ready is None
+                              else min(self.min_ready, ready))
+
+
+def bench_rolling(side: int, replicas: int,
+                  strategies: List[tuple]) -> List[Dict[str, object]]:
+    from repro.api import Workload
+
+    out: List[Dict[str, object]] = []
+    for surge, unavail in strategies:
+        plane = _plane(side)
+        witness = _BoundsWitness("srv", replicas)
+        plane.store.add_journal(witness)
+        plane.submit(_template())
+        plane.submit(Workload(claim_template="rep", replicas=replicas,
+                              role="serve", max_surge=surge,
+                              max_unavailable=unavail), name="srv")
+        plane.wait_for("Workload", "srv")
+        witness.arm()
+        t0 = time.perf_counter()
+        plane.edit("Workload", "srv",
+                   lambda w: w.runtime_config.update({"rolled": True}))
+        plane.wait_for("Workload", "srv")
+        dt = time.perf_counter() - t0
+        peak_unavail = replicas - (witness.min_ready or 0)
+        out.append({
+            "max_surge": surge,
+            "max_unavailable": unavail,
+            "replicas": replicas,
+            "rollout_s": round(dt, 4),
+            "peak_total": witness.peak_total,
+            "peak_unavailability": peak_unavail,
+            "surge_bound_held": witness.peak_total <= replicas + surge,
+            "availability_bound_held": peak_unavail <= unavail,
+        })
+    return out
+
+
+def bench_drain(side: int, replicas: int) -> Dict[str, object]:
+    from repro.api import DisruptionBudget, Workload
+    from repro.node import NodePlane
+    from repro.node.lifecycle import CONDITION_DRAINED
+
+    from repro.api import ControlPlane
+    from repro.core import DriverRegistry, IciDriver, TpuDriver
+    from repro.topology.tpu import TpuPodSpec, build_tpu_cluster
+    cluster = build_tpu_cluster(1, TpuPodSpec(x=side, y=side))
+    reg = DriverRegistry()
+    reg.add(TpuDriver(cluster)).add(IciDriver(cluster))
+    plane = ControlPlane(reg, cluster, reconcile_mode="inline")
+    plane.node_clock = lambda: 1000.0
+    NodePlane(plane).start(start_threads=False)
+    plane.reconcile()
+
+    plane.submit(_template())
+    plane.submit(Workload(claim_template="rep", replicas=replicas,
+                          role="serve", max_surge=1), name="srv")
+    plane.wait_for("Workload", "srv")
+    plane.submit(DisruptionBudget(name="pdb", selector={"workload": "srv"},
+                                  min_available=max(1, replicas - 1)))
+    plane.reconcile()
+    # drain the node hosting the first replica
+    first = sorted(o.meta.name for o in plane.store.list_objects(
+        "ResourceClaim", selector={"workload": "srv"}))[0]
+    node = {a.ref.node for a in plane.store.get(
+        "ResourceClaim", first).spec.allocation.devices}.pop()
+    t0 = time.perf_counter()
+    plane.edit("Node", node, lambda n: setattr(n, "drain", True))
+    plane.reconcile()
+    plane.wait_for("Workload", "srv")
+    drained = plane.store.get("Node", node).is_true(
+        CONDITION_DRAINED, current=True)
+    dt = time.perf_counter() - t0
+    return {"replicas": replicas, "drain_s": round(dt, 4),
+            "drained": drained}
+
+
+def bench_canary(side: int, replicas: int) -> Dict[str, object]:
+    from repro.api import CanaryRollout, Workload
+    from repro.rollout.canary import PHASE_ROLLED_BACK, spec_blob
+    from repro.serve.slo import SloTracker
+
+    plane = _plane(side)
+    plane.submit(_template())
+    plane.submit(Workload(claim_template="rep", replicas=replicas,
+                          role="serve", max_surge=1,
+                          runtime_config={"batch": 8}), name="srv")
+    plane.wait_for("Workload", "srv")
+    prior = spec_blob(plane.store.get("Workload", "srv").spec)
+    plane.submit(CanaryRollout(name="cr", workload="srv",
+                               config={"batch": 32}, replicas=1,
+                               slo={"p95_latency_ms": 50.0}, min_samples=4))
+    plane.reconcile()
+    tracker = SloTracker()
+    for _ in range(8):
+        tracker.observe("baseline", 10.0)
+        tracker.observe("canary", 500.0)       # breach
+    t0 = time.perf_counter()
+    tracker.publish(plane, "srv")
+    plane.reconcile()
+    restored = spec_blob(plane.store.get("Workload", "srv").spec) == prior
+    rollback_s = time.perf_counter() - t0
+    plane.wait_for("Workload", "srv")
+    converge_s = time.perf_counter() - t0
+    phase = plane.store.get("CanaryRollout", "cr") \
+        .status.outputs["canary"]["phase"]
+    return {"replicas": replicas,
+            "rollback_s": round(rollback_s, 4),
+            "converge_s": round(converge_s, 4),
+            "rolled_back": phase == PHASE_ROLLED_BACK,
+            "restored_byte_identical": restored}
+
+
+def main(argv: Optional[List[str]] = None) -> Dict[str, object]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    side = 4 if args.smoke else 8
+    replicas = 3 if args.smoke else 8
+
+    result: Dict[str, object] = {
+        "rolling": bench_rolling(side, replicas,
+                                 [(1, 0), (2, 0), (0, 1), (2, 2)]),
+        "drain": bench_drain(4 if args.smoke else 6, replicas),
+        "canary": bench_canary(side, replicas),
+    }
+    return result
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

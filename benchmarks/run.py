@@ -74,7 +74,8 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "recovery", "informer", "scheduler", "roofline", "kernels"]
+            "recovery", "informer", "scheduler", "rollout", "roofline",
+            "kernels"]
 
 
 def main() -> None:
@@ -119,6 +120,11 @@ def main() -> None:
             from . import bench_scheduler
             perf["scheduler"] = bench_scheduler.main(
                 ["--smoke"] if args.smoke else [])
+        elif section == "rollout":
+            from . import bench_rollout
+            perf["rollout"] = bench_rollout.main(
+                ["--smoke"] if args.smoke else [])
+            print(json.dumps(perf["rollout"], indent=1))
         elif section == "roofline":
             from . import bench_roofline
             bench_roofline.main()

@@ -108,4 +108,34 @@ print("informer:", "overlap", str(ov) + "%,",
       "step_ms", r["step_ms"])
 '
 
+echo "== chaos: rollout plane (pinned seeds, lock witness armed) =="
+# rolling updates / drains / canary rollback under worker kills at the
+# rollout.* sync points and node SIGKILL mid-rollout; the RolloutMonitor
+# journal hook asserts surge/availability/budget bounds at EVERY store
+# state, and the converged world must match the inline oracle
+PYTEST_GLOBAL_TIMEOUT=900 STRESS_SEEDS=7,23,42 LOCK_WITNESS=1 \
+  python -m pytest -x -q tests/test_rollout.py
+
+echo "== smoke: rollout bench (reduced sizes, merged into BENCH_reconcile.json) =="
+# rollout duration + observed peak unavailability per strategy, drain
+# latency, canary rollback latency; the witnessed bounds must match the
+# declared strategy and the rollback must restore the spec byte-identically
+python -m benchmarks.run --only rollout --smoke \
+  | python -c '
+import json, sys
+blob = sys.stdin.read()
+r = json.loads(blob[blob.index("{"):blob.rindex("}") + 1])
+for row in r["rolling"]:
+    assert row["surge_bound_held"], f"surge bound violated: {row}"
+    assert row["availability_bound_held"], f"availability bound violated: {row}"
+assert r["drain"]["drained"], "drain did not complete"
+assert r["canary"]["rolled_back"], "canary breach did not roll back"
+assert r["canary"]["restored_byte_identical"], "rollback not byte-identical"
+worst = max(row["rollout_s"] for row in r["rolling"])
+print("rollout:",
+      "worst_rollout_s", worst,
+      "drain_s", r["drain"]["drain_s"],
+      "rollback_s", r["canary"]["rollback_s"])
+'
+
 echo "CI_OK"

@@ -61,16 +61,23 @@ def _fired_points(src: SourceFile) -> List[Tuple[str, int]]:
 
 
 def _referenced_patterns(src: SourceFile) -> List[Tuple[str, int]]:
-    """Names/prefixes from delay_points=/kill_points= keyword tuples."""
+    """Names/prefixes from delay_points=/kill_points=/latency_points=."""
     out: List[Tuple[str, int]] = []
     for node in ast.walk(src.tree):
         if not isinstance(node, ast.Call):
             continue
         for kw in node.keywords:
-            if kw.arg not in ("delay_points", "kill_points"):
+            if kw.arg not in ("delay_points", "kill_points",
+                              "latency_points"):
                 continue
             if isinstance(kw.value, (ast.Tuple, ast.List)):
                 for elt in kw.value.elts:
+                    if (isinstance(elt, ast.Constant)
+                            and isinstance(elt.value, str)):
+                        out.append((elt.value, elt.lineno))
+            elif isinstance(kw.value, ast.Dict):
+                # latency_points={"rollout.stamp": 0.01, ...}
+                for elt in kw.value.keys:
                     if (isinstance(elt, ast.Constant)
                             and isinstance(elt.value, str)):
                         out.append((elt.value, elt.lineno))

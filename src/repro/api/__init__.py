@@ -7,7 +7,8 @@ submit versioned objects (ResourceClaims, Workloads) to an
 scripts used to hand-sequence. See docs/API.md for the workflow.
 """
 
-from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
+from .objects import (ApiObject, CanaryRollout, Condition, DisruptionBudget,
+                      Lease, Node, ObjectMeta,
                       ObjectStatus, Workload, TRUE, FALSE, UNKNOWN,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
                       CONDITION_PREPARED, CONDITION_READY,
@@ -28,7 +29,8 @@ from .runtime import (ConditionWaiter, ControlPlaneRuntime, RuntimeStats,
                       TokenBucket)
 
 __all__ = [
-    "ApiObject", "Condition", "Lease", "Node", "ObjectMeta", "ObjectStatus",
+    "ApiObject", "CanaryRollout", "Condition", "DisruptionBudget", "Lease",
+    "Node", "ObjectMeta", "ObjectStatus",
     "Workload", "TRUE", "FALSE", "UNKNOWN",
     "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
     "CONDITION_READY", "CONDITION_SCHEDULED", "PHASE_ORDER",

@@ -44,6 +44,16 @@ Known sync points (prefix-matchable, e.g. ``"store."`` hits all three):
                               a kill here IS the SIGKILL'd-daemon
                               scenario: heartbeats stop, the lease
                               lapses, the node is evicted)
+``rollout.stamp``             rolling update about to create a surge
+                              replica claim (killable)
+``rollout.delete``            rolling update about to tear down a
+                              replaced replica claim (killable)
+``rollout.evict``             voluntary eviction (drain / budget path)
+                              about to deallocate a claim (killable)
+``rollout.canary``            canary controller about to record a phase
+                              transition (killable — a kill here lands
+                              between the phase write and the workload
+                              edit, the crash-idempotence window)
 ====================          =================================================
 """
 
@@ -66,6 +76,7 @@ SYNC_POINTS = (
     "runtime.informer.pump", "runtime.worker.pop",
     "runtime.worker.reconcile",
     "node.agent.publish", "node.agent.heartbeat",
+    "rollout.stamp", "rollout.delete", "rollout.evict", "rollout.canary",
 )
 
 
@@ -81,6 +92,14 @@ class FaultInjector:
     probability ``delay_prob`` per hit; kills fire with ``kill_prob`` at
     killable points, at most ``max_kills`` times total (so a stress run
     always converges once the kill budget is spent).
+
+    ``latency_points`` maps point names/prefixes to a *base latency in
+    seconds* injected on **every** hit (scaled by a seeded uniform
+    factor in ``[0.5, 1.5]``) — the slow-RPC / congested-etcd model, as
+    opposed to the probabilistic micro-delays above whose job is only
+    to shake thread schedules. Use it to hold a rollout inside a
+    window (e.g. ``{"rollout.stamp": 0.01}`` keeps surge replicas slow
+    enough that availability bounds are actually exercised).
     """
 
     def __init__(self, seed: int = 0, *,
@@ -89,7 +108,8 @@ class FaultInjector:
                                                 "runtime."),
                  delay_prob: float = 0.05, max_delay_s: float = 0.002,
                  kill_points: Iterable[str] = ("runtime.worker.",),
-                 kill_prob: float = 0.0, max_kills: int = 4):
+                 kill_prob: float = 0.0, max_kills: int = 4,
+                 latency_points: Optional[Dict[str, float]] = None):
         self.seed = seed
         self.delay_points = tuple(delay_points)
         self.delay_prob = delay_prob
@@ -97,16 +117,25 @@ class FaultInjector:
         self.kill_points = tuple(kill_points)
         self.kill_prob = kill_prob
         self.max_kills = max_kills
+        self.latency_points = dict(latency_points or {})
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         # telemetry: point -> hits / delays / kills (assertable in tests)
         self.hits: Dict[str, int] = {}
         self.delays = 0
         self.kills = 0
+        self.latency_injections = 0
+        self.latency_injected_s = 0.0
 
     @staticmethod
     def _matches(point: str, patterns: Tuple[str, ...]) -> bool:
         return any(point == p or point.startswith(p) for p in patterns)
+
+    def _latency_base(self, point: str) -> float:
+        for pat, base in self.latency_points.items():
+            if point == pat or point.startswith(pat):
+                return base
+        return 0.0
 
     def fire(self, point: str, killable: bool = False, **ctx: object) -> None:
         """Called from a sync point; may sleep or (if killable) raise."""
@@ -123,6 +152,13 @@ class FaultInjector:
                     and self._rng.random() < self.delay_prob):
                 self.delays += 1
                 delay = self._rng.uniform(0.0, self.max_delay_s)
+            base = self._latency_base(point)
+            if base > 0.0 and not kill:
+                # every hit pays the configured latency (jittered by a
+                # seeded factor) — a congested apiserver, not a race shake
+                delay += base * self._rng.uniform(0.5, 1.5)
+                self.latency_injections += 1
+                self.latency_injected_s += delay
         if kill:
             raise InjectedFault(f"injected worker kill at {point} "
                                 f"(kill #{self.kills}, seed {self.seed})")
@@ -132,7 +168,9 @@ class FaultInjector:
     def summary(self) -> Dict[str, object]:
         with self._lock:
             return {"seed": self.seed, "hits": dict(self.hits),
-                    "delays": self.delays, "kills": self.kills}
+                    "delays": self.delays, "kills": self.kills,
+                    "latency_injections": self.latency_injections,
+                    "latency_injected_s": round(self.latency_injected_s, 6)}
 
 
 # The installed injector. One global slot (not thread-local): the whole

@@ -34,6 +34,7 @@ from ..core.drivers import DriverRegistry
 from ..core.nri import Events
 from ..core.oci import AttachmentSpec, MeshRuntime
 from ..core.planner import MeshPlanner
+from .chaos import sync_point
 from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
                       CONDITION_ALLOCATED, CONDITION_ATTACHED,
                       CONDITION_PREPARED, CONDITION_READY,
@@ -54,6 +55,7 @@ RETRYABLE_REASONS = frozenset({
     "Unsatisfiable", "PlanFailed", "NoPlanner",
     "TemplateMissing", "ClaimMissing", "AdmissionRejected",
     "NoFeasibleNode", "Unschedulable", "PrepareFailed",
+    "BudgetBlocked",
 })
 
 
@@ -266,37 +268,71 @@ class WorkloadController(Controller):
     name = "workload-controller"
 
     def _replica_claims(self, plane: "ControlPlane", obj: ApiObject
-                        ) -> Tuple[Optional[List[ApiObject]], str]:
-        """Converge owned claims on spec.replicas -> (claims, admission msg).
+                        ) -> Tuple[Optional[List[ApiObject]], str, bool]:
+        """One bounded rolling step -> (claims, admission msg, converged).
 
         ``claims`` is None when the template is missing; a non-empty
         second element reports an admission rejection that capped the
         replica set below spec (the workload stays not-Ready and retries
         under backoff — capacity may be published later).
+
+        Replica management is *rolling*, not replace-on-edit: each
+        claim carries the revision it was stamped for (template
+        generation + runtime config, :mod:`repro.rollout.strategy`) and
+        a template/config edit replaces claims one bounded step per
+        reconcile — at most ``max_surge`` claims beyond spec exist and
+        ready replicas never drop below ``replicas - max_unavailable``
+        through any single store write. Old-revision replicas keep
+        serving until their replacements are ready.
         """
+        from ..rollout.strategy import (REVISION_LABEL, claim_ready,
+                                        claim_revision, desired_revisions,
+                                        plan_rollout, revision_hash)
         wl: Workload = obj.spec
         store = plane.store
         tmpl = store.try_get("ResourceClaimTemplate", wl.claim_template)
         if tmpl is None:
-            return None, ""
-        admission_msg = ""
+            return None, "", False
+        base_rev = revision_hash(tmpl.meta.generation, wl.runtime_config)
+        desired = desired_revisions(wl, tmpl.meta.generation)
         owned = store.list_objects("ResourceClaim",
                                    selector={"workload": obj.meta.name})
+        observed = [(o.meta.name, claim_revision(o, base_rev),
+                     claim_ready(o)) for o in owned]
+        plan = plan_rollout(observed, desired, replicas=wl.replicas,
+                            max_surge=wl.max_surge,
+                            max_unavailable=wl.max_unavailable)
+        for name in plan.delete_free + plan.delete_bounded:
+            extra = store.try_get("ResourceClaim", name)
+            if extra is None:
+                continue
+            sync_point("rollout.delete", killable=True, claim=name)
+            plane.unprepare(extra.spec)
+            if extra.spec.allocated:
+                plane.allocator.deallocate(extra.spec)
+            store.delete("ResourceClaim", name)
+        admission_msg = ""
         stamped = 0
-        while len(owned) < wl.replicas:
-            claim = tmpl.spec.instantiate(owner=obj.meta.name)
-            try:
-                owned.append(store.create(claim,
-                                          labels={"workload": obj.meta.name}))
-                # count *landed* stamps only: a rejected stamp would
-                # re-touch the template every retry and never fixpoint
-                stamped += 1
-            except AdmissionError as e:
-                # strip the stamped claim's name (counter-suffixed) so the
-                # surfaced condition message is stable across retries —
-                # an ever-changing message would never reach a fixpoint
-                admission_msg = str(e).split(
-                    "rejected at admission: ", 1)[-1][:240]
+        for rev in sorted(plan.stamp):
+            for _ in range(plan.stamp[rev]):
+                claim = tmpl.spec.instantiate(owner=obj.meta.name)
+                sync_point("rollout.stamp", killable=True,
+                           claim=claim.name, revision=rev)
+                try:
+                    store.create(claim, labels={"workload": obj.meta.name,
+                                                REVISION_LABEL: rev})
+                    # count *landed* stamps only: a rejected stamp would
+                    # re-touch the template every retry and never fixpoint
+                    stamped += 1
+                except AdmissionError as e:
+                    # strip the stamped claim's name (counter-suffixed) so
+                    # the surfaced condition message is stable across
+                    # retries — an ever-changing message would never
+                    # reach a fixpoint
+                    admission_msg = str(e).split(
+                        "rejected at admission: ", 1)[-1][:240]
+                    break
+            if admission_msg:
                 break
         if stamped:
             # stamping advanced the template's name counter *in memory*
@@ -309,22 +345,33 @@ class WorkloadController(Controller):
                 "ResourceClaimTemplate", tmpl.meta.name,
                 lambda st, n=stamped: st.outputs.__setitem__(
                     "stamped_total", st.outputs.get("stamped_total", 0) + n))
-        while len(owned) > wl.replicas:
-            extra = owned.pop()
-            plane.unprepare(extra.spec)
-            if extra.spec.allocated:
-                plane.allocator.deallocate(extra.spec)
-            store.delete("ResourceClaim", extra.meta.name)
-        return owned, admission_msg
+        claims = store.list_objects("ResourceClaim",
+                                    selector={"workload": obj.meta.name})
+        rollout = {
+            "revisions": {},
+            "ready": sum(1 for c in claims if claim_ready(c)),
+            "converged": plan.converged,
+            "base_revision": base_rev,
+            "canary_revision": next(
+                (r for r in desired if r != base_rev), ""),
+        }
+        for c in claims:
+            rev = claim_revision(c, base_rev)
+            rollout["revisions"][rev] = rollout["revisions"].get(rev, 0) + 1
+        if obj.status.outputs.get("rollout") != rollout:
+            store.set_output("Workload", obj.meta.name, "rollout", rollout)
+        return claims, admission_msg, plan.converged
 
     def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
         wl: Workload = obj.spec
         store = plane.store
         changed = False
         admission_msg = ""
+        converged = True
         if wl.claim_template:
             prior = store.resource_version
-            claims, admission_msg = self._replica_claims(plane, obj)
+            claims, admission_msg, converged = self._replica_claims(
+                plane, obj)
             if claims is None:
                 return self._set(plane, obj, CONDITION_READY, False,
                                  "TemplateMissing",
@@ -366,10 +413,15 @@ class WorkloadController(Controller):
         needs_attach = bool(wl.claim and wl.axes)
         attached = (obj.is_true(CONDITION_ATTACHED, current=True)
                     if needs_attach else all_prep)
-        ready = all_alloc and all_prep and attached and not admission_msg
+        ready = (all_alloc and all_prep and attached and converged
+                 and not admission_msg)
         was_ready = obj.is_true(CONDITION_READY, current=True)
         if admission_msg:
             reason, message = "AdmissionRejected", admission_msg
+        elif not ready and all_alloc and all_prep and attached:
+            # counts/revisions still rolling while every present claim
+            # is healthy: surface the rollout, not a phase blocker
+            reason, message = "RollingUpdate", "replica set converging"
         else:
             blocker = (CONDITION_ALLOCATED if not all_alloc else
                        CONDITION_PREPARED if not all_prep else
@@ -426,15 +478,21 @@ class ControlPlane:
         # node-plane controllers ride along unconditionally (both are
         # inert without Node objects); imported late — repro.node builds
         # on this module's Controller base
-        from ..node.lifecycle import NodeLifecycleController
+        from ..node.lifecycle import DrainController, NodeLifecycleController
         from ..node.scheduler import SchedulerController
+        from ..rollout.budget import DisruptionBudgetController
+        from ..rollout.canary import CanaryController
         # Node lifecycle first (evictions land before claims reconcile),
-        # then the scheduler ahead of allocation in the claim chain
+        # the drain controller right behind it (budget-aware voluntary
+        # eviction on the same Node chain), then the scheduler ahead of
+        # allocation in the claim chain; rollout bookkeeping (budgets,
+        # canaries) runs after workloads so it judges settled state
         self.controllers: List[Controller] = [
-            NodeLifecycleController(),
+            NodeLifecycleController(), DrainController(),
             SchedulerController(), AllocationController(),
             PrepareController(),
             AttachmentController(), WorkloadController(),
+            DisruptionBudgetController(), CanaryController(),
         ]
         # wall-clock for Node leases (injectable: deterministic tests
         # drive expiry by swapping the clock, not by sleeping)
@@ -465,6 +523,14 @@ class ControlPlane:
         # workload name -> (claim, template) it last referenced, so a
         # spec edit that repoints a workload drops the stale edge
         self._wl_refs: Dict[str, Tuple[str, str]] = {}
+        # workload name -> canary names targeting it (slo telemetry and
+        # workload edits wake the judging CanaryController)
+        self._canary_refs: Dict[str, Set[str]] = {}
+        # canary name -> workload it targets (edge cleanup on delete)
+        self._canary_target: Dict[str, str] = {}
+        # nodes whose spec asks for a drain: claim churn re-examines
+        # them (evictions blocked on a budget retry when claims move)
+        self._draining_nodes: Set[str] = set()
         # generation an object last failed at (stale-failure backoff reset)
         self._failure_gen: Dict[Tuple[str, str], int] = {}
         # incremental sync_inventory state
@@ -832,6 +898,13 @@ class ControlPlane:
                 owners.add(owner)
             for wl in owners:
                 q.add("Workload", wl)
+            # claim churn moves budget accounting and can unblock a
+            # drain waiting on its disruption budget
+            if self.store.count("DisruptionBudget"):
+                q.add_all("DisruptionBudget",
+                          (o.meta.name for o in
+                           self.store.list_objects("DisruptionBudget")))
+            q.add_all("Node", self._draining_nodes)
             if e.type == DELETED:
                 # prune edges — but keep workloads that still *reference*
                 # this name (they must wake if the claim is re-created)
@@ -866,6 +939,9 @@ class ControlPlane:
             if wl.claim_template:
                 self._template_owners.setdefault(wl.claim_template,
                                                  set()).add(e.name)
+            # workload churn (spec edits, slo telemetry status writes)
+            # wakes any canary judging this workload
+            q.add_all("CanaryRollout", self._canary_refs.get(e.name, ()))
         elif kind == "ResourceSlice":
             if slice_nodes is not None:
                 slice_nodes.add(e.object.spec.node)
@@ -889,8 +965,36 @@ class ControlPlane:
             if e.type == DELETED:
                 q.forget(kind, e.name)
                 self._failure_gen.pop((kind, e.name), None)
+                self._draining_nodes.discard(e.name)
             else:
                 q.add(kind, e.name)
+                if e.object.spec.drain:
+                    self._draining_nodes.add(e.name)
+                else:
+                    self._draining_nodes.discard(e.name)
+        elif kind == "DisruptionBudget":
+            if e.type == DELETED:
+                q.forget(kind, e.name)
+                self._failure_gen.pop((kind, e.name), None)
+            else:
+                q.add(kind, e.name)
+            # a budget edit can admit evictions a drain is waiting on
+            q.add_all("Node", self._draining_nodes)
+        elif kind == "CanaryRollout":
+            prev_wl = self._canary_target.get(e.name, "")
+            if prev_wl and prev_wl != e.object.spec.workload:
+                self._canary_refs.get(prev_wl, set()).discard(e.name)
+            if e.type == DELETED:
+                q.forget(kind, e.name)
+                self._failure_gen.pop((kind, e.name), None)
+                self._canary_target.pop(e.name, None)
+                self._canary_refs.get(e.object.spec.workload,
+                                      set()).discard(e.name)
+            else:
+                q.add(kind, e.name)
+                target = e.object.spec.workload
+                self._canary_target[e.name] = target
+                self._canary_refs.setdefault(target, set()).add(e.name)
         elif kind == "Lease":
             # every lease write (heartbeat, takeover, forced expiry)
             # re-examines the guarded node; lease name == node name
@@ -1043,9 +1147,10 @@ class ControlPlane:
                 return round_no
         raise self._nonconvergence_error(max_rounds, last_changed)
 
-    def _nonconvergence_error(self, max_rounds: int,
-                              dirty: List[Tuple[str, str]]) -> RuntimeError:
-        """Name the objects still churning + their last condition moves."""
+    def _dirty_detail(self, dirty: List[Tuple[str, str]]) -> str:
+        """Per-object diagnostic lines: condition summary + the last
+        condition transition. Shared by the inline loop's
+        non-convergence error and the runtime's wait_ready timeout."""
         now = time.monotonic()
         lines = []
         for kind, name in sorted(set(dirty)):
@@ -1061,10 +1166,15 @@ class ControlPlane:
                       if last else "no conditions yet")
             lines.append(f"  {kind}/{name}[g{obj.meta.generation}]: "
                          f"{obj.conditions_summary()}; {detail}")
-        detail = "\n".join(lines) or "  <no dirty objects recorded>"
+        return "\n".join(lines) or "  <no dirty objects recorded>"
+
+    def _nonconvergence_error(self, max_rounds: int,
+                              dirty: List[Tuple[str, str]]) -> RuntimeError:
+        """Name the objects still churning + their last condition moves."""
         return RuntimeError(
             f"reconcile did not converge in {max_rounds} rounds; "
-            f"{len(set(dirty))} object(s) still dirty:\n{detail}")
+            f"{len(set(dirty))} object(s) still dirty:\n"
+            f"{self._dirty_detail(dirty)}")
 
     def wait_for(self, kind: str, name: str,
                  condition: str = CONDITION_READY) -> ApiObject:

@@ -35,7 +35,7 @@ from ..core.uid import new_uid
 __all__ = [
     "TRUE", "FALSE", "UNKNOWN",
     "Condition", "ObjectMeta", "ObjectStatus", "ApiObject", "Workload",
-    "Node", "Lease",
+    "Node", "Lease", "DisruptionBudget", "CanaryRollout",
     "CONDITION_ALLOCATED", "CONDITION_PREPARED", "CONDITION_ATTACHED",
     "CONDITION_READY", "CONDITION_SCHEDULED", "PHASE_ORDER",
 ]
@@ -152,6 +152,15 @@ class Workload:
       ResourceClaimTemplate — the paper's StatefulSet/serve-replica
       shape. Scale up/down is a ``replicas`` spec edit the reconciler
       converges on.
+
+    Template workloads update by *rolling replacement* rather than
+    replace-on-edit: a template or ``runtime_config`` change gives the
+    replica set a new revision, and the controller replaces claims one
+    bounded step at a time — at most ``max_surge`` extra claims exist
+    and at most ``max_unavailable`` desired replicas are non-Ready at
+    any observable store state (Deployment rolling-update semantics).
+    ``canary_config``/``canary_replicas`` carve out a replica subset
+    running an overlayed config, watched by the CanaryController.
     """
 
     claim: str = ""
@@ -165,6 +174,20 @@ class Workload:
     # Execute the AttachmentSpec through MeshRuntime (needs enough JAX
     # devices in-process). False still emits the declarative spec.
     build_mesh: bool = True
+    # Rolling-update strategy (template workloads): how many claims may
+    # exist beyond `replicas` during an update, and how many desired
+    # replicas may be non-Ready at any observable store state.
+    max_surge: int = 1
+    max_unavailable: int = 0
+    # Runtime configuration (model/kernel knobs) folded into the replica
+    # revision: editing it triggers a rolling replacement, exactly like
+    # a template edit.
+    runtime_config: Dict[str, Any] = field(default_factory=dict)
+    # Canary overlay: `canary_replicas` of the set run with
+    # runtime_config | canary_config; the CanaryController promotes or
+    # rolls back based on SLO telemetry.
+    canary_config: Dict[str, Any] = field(default_factory=dict)
+    canary_replicas: int = 0
 
     def __post_init__(self) -> None:
         if bool(self.claim) == bool(self.claim_template):
@@ -176,6 +199,17 @@ class Workload:
                 "template replica sets are not planned into one mesh")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if self.max_surge < 0 or self.max_unavailable < 0:
+            raise ValueError("max_surge/max_unavailable must be >= 0")
+        if self.max_surge + self.max_unavailable < 1:
+            raise ValueError(
+                "max_surge + max_unavailable must be >= 1 or a rolling "
+                "update can make no progress")
+        if not 0 <= self.canary_replicas <= self.replicas:
+            raise ValueError(
+                "canary_replicas must be between 0 and replicas")
+        if self.canary_replicas and not self.canary_config:
+            raise ValueError("canary_replicas requires a canary_config")
 
 
 @dataclass
@@ -194,8 +228,12 @@ class Node:
     # agent identity last holding this node (matches Lease.holder)
     provider: str = ""
     # cordoned: stays Ready (inventory kept) but the scheduler skips it,
-    # the drain half of node maintenance
+    # the first half of node maintenance
     unschedulable: bool = False
+    # draining: cordon plus budget-aware eviction of the claims placed
+    # here (the DrainController's trigger); the node reports a Drained
+    # condition once no claim holds its devices
+    drain: bool = False
     pod: int = 0
 
 
@@ -215,3 +253,56 @@ class Lease:
     holder: str = ""
     duration_s: float = 1.0
     acquired: float = 0.0
+
+
+@dataclass
+class DisruptionBudget:
+    """Bound on *voluntary* disruption for a set of claims (PDB analogue).
+
+    ``selector`` matches claim labels (e.g. ``{"workload": "serve"}``);
+    a voluntary eviction (drain, canary teardown) of a Ready matching
+    claim is refused whenever it would leave fewer than ``min_available``
+    Ready claims in the matched set. Involuntary failures (lease expiry,
+    node SIGKILL) bypass budgets, exactly as in Kubernetes.
+    """
+
+    name: str
+    selector: Dict[str, str] = field(default_factory=dict)
+    min_available: int = 0
+
+    def __post_init__(self) -> None:
+        if not self.selector:
+            raise ValueError("DisruptionBudget needs a non-empty selector")
+        if self.min_available < 0:
+            raise ValueError("min_available must be >= 0")
+
+
+@dataclass
+class CanaryRollout:
+    """Declarative canary: try ``config`` on ``replicas`` of a workload.
+
+    The CanaryController overlays ``config`` onto the target workload's
+    canary slot, waits for at least ``min_samples`` SLO observations per
+    arm from the serve plane, and then either *promotes* (folds the
+    config into ``runtime_config`` for every replica) or *rolls back*
+    (restores the workload spec byte-identically to its pre-canary
+    form) when any ``slo`` ceiling is breached.
+    """
+
+    name: str
+    workload: str = ""
+    config: Dict[str, Any] = field(default_factory=dict)
+    replicas: int = 1
+    # metric ceilings, e.g. {"p95_latency_ms": 50.0, "error_rate": 0.01}
+    slo: Dict[str, float] = field(default_factory=dict)
+    min_samples: int = 8
+
+    def __post_init__(self) -> None:
+        if not self.workload:
+            raise ValueError("CanaryRollout needs a target workload")
+        if not self.config:
+            raise ValueError("CanaryRollout needs a non-empty config")
+        if self.replicas < 1:
+            raise ValueError("canary replicas must be >= 1")
+        if self.min_samples < 1:
+            raise ValueError("min_samples must be >= 1")

@@ -60,8 +60,9 @@ from ..core.oci import AttachmentSpec, DeviceBinding
 from ..core.planner import AxisSpec
 from ..core.resources import Device, DeviceRef, ResourceSlice
 from .chaos import sync_point
-from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
-                      ObjectStatus, Workload, CONDITION_ALLOCATED)
+from .objects import (ApiObject, CanaryRollout, Condition, DisruptionBudget,
+                      Lease, Node, ObjectMeta, ObjectStatus, Workload,
+                      CONDITION_ALLOCATED)
 from .store import ADDED, DELETED, MODIFIED, ApiStore, WatchEvent
 
 __all__ = [
@@ -142,9 +143,15 @@ _DATACLASS_CODECS: Dict[str, Tuple[Type[Any], Tuple[str, ...]]] = {
     "ResourceSlice": (ResourceSlice, ("driver", "pool", "node", "devices",
                                       "generation")),
     "Workload": (Workload, ("claim", "claim_template", "axes", "placement",
-                            "seed", "role", "replicas", "build_mesh")),
-    "Node": (Node, ("name", "provider", "unschedulable", "pod")),
+                            "seed", "role", "replicas", "build_mesh",
+                            "max_surge", "max_unavailable", "runtime_config",
+                            "canary_config", "canary_replicas")),
+    "Node": (Node, ("name", "provider", "unschedulable", "drain", "pod")),
     "Lease": (Lease, ("name", "holder", "duration_s", "acquired")),
+    "DisruptionBudget": (DisruptionBudget,
+                         ("name", "selector", "min_available")),
+    "CanaryRollout": (CanaryRollout, ("name", "workload", "config",
+                                      "replicas", "slo", "min_samples")),
     "AxisSpec": (AxisSpec, ("name", "size", "physical")),
     "Condition": (Condition, ("type", "status", "reason", "message",
                               "observed_generation", "last_transition")),

@@ -198,6 +198,10 @@ class ControlPlaneRuntime:
     (:meth:`delete_claim`), which do.
     """
 
+    # wait_ready's fallback deadline: callers passing timeout=None get a
+    # bounded wait with the non-convergence diagnostic, not a silent hang
+    DEFAULT_TIMEOUT = 60.0
+
     def __init__(self, plane: Any, *, workers_per_kind: int = 2,
                  poll_interval_s: float = 0.02,
                  max_rate_hz: Optional[float] = None,
@@ -343,14 +347,20 @@ class ControlPlaneRuntime:
 
     def wait_ready(self, kind_or_obj: Any, name: Optional[str] = None,
                    condition: str = CONDITION_READY,
-                   timeout: Optional[float] = 60.0) -> ApiObject:
+                   timeout: Optional[float] = None) -> ApiObject:
         """Block until the object reaches ``condition`` for its current spec.
 
         The threaded analogue of ``ControlPlane.wait_for``: accepts an
         ``ApiObject`` or ``(kind, name)``. Raises ``TimeoutError`` with
-        the object's condition summary and the runtime's queue state
-        when convergence does not arrive in time.
+        the object's condition summary, last condition transitions and
+        the runtime's queue state when convergence does not arrive in
+        time. ``timeout=None`` means :attr:`DEFAULT_TIMEOUT`, never
+        "wait forever": an unbounded wait on a wedged runtime hangs the
+        caller with zero diagnostics, which is strictly worse than a
+        loud timeout naming the stuck objects.
         """
+        if timeout is None:
+            timeout = self.DEFAULT_TIMEOUT
         if isinstance(kind_or_obj, ApiObject):
             kind, name = kind_or_obj.meta.kind, kind_or_obj.meta.name
         else:
@@ -378,10 +388,13 @@ class ControlPlaneRuntime:
                 # and mask the TimeoutError the caller is promised
                 queue_state = repr(self.plane.queue)
                 inflight = sorted(self._inflight)
+                pending = self.plane.queue.pending()
+            detail = self.plane._dirty_detail([(kind, name)] + pending)
             raise TimeoutError(
                 f"{kind}/{name} did not reach {condition}=True within "
                 f"{timeout}s: {summary}; queue={queue_state}, "
-                f"inflight={inflight}, stats={self.stats}"
+                f"inflight={inflight}, stats={self.stats}; "
+                f"still-dirty keys and last transitions:\n{detail}"
             ) from None
 
     def wait_quiesce(self, timeout: float = 30.0) -> bool:

@@ -45,8 +45,8 @@ from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
 from ..core.claims import (DeviceClass, ResourceClaim, ResourceClaimTemplate)
 from ..core.resources import ResourceSlice
 from .chaos import sync_point
-from .objects import (ApiObject, Condition, Lease, Node, ObjectMeta,
-                      ObjectStatus, TRUE, Workload)
+from .objects import (ApiObject, CanaryRollout, Condition, DisruptionBudget,
+                      Lease, Node, ObjectMeta, ObjectStatus, TRUE, Workload)
 
 __all__ = ["ApiStore", "Watch", "WatchEvent", "ConflictError",
            "ApiError", "AdmissionError", "KIND_OF"]
@@ -61,6 +61,8 @@ KIND_OF: Dict[Type[Any], str] = {
     Workload: "Workload",
     Node: "Node",
     Lease: "Lease",
+    DisruptionBudget: "DisruptionBudget",
+    CanaryRollout: "CanaryRollout",
 }
 
 

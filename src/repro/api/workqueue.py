@@ -23,6 +23,7 @@ rounds.
 
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .chaos import sync_point
@@ -69,10 +70,23 @@ class WorkQueue:
 
     # -- backoff -------------------------------------------------------------
     def failure(self, kind: str, name: str) -> int:
-        """Record a reconcile failure; returns the delay (rounds) applied."""
+        """Record a reconcile failure; returns the delay (rounds) applied.
+
+        The delay is the exponential window plus a *deterministic* jitter
+        in ``[0, window]`` keyed on the object identity and its failure
+        count: without jitter, every object failing in the same round
+        retries in the same round forever (a thundering herd against the
+        shared allocator); hashing the key decorrelates them while two
+        queues fed the same failure sequence still produce byte-identical
+        schedules. ``window <= delay <= 2 * window`` always holds.
+        """
         key = (kind, name)
         f = self._failures.get(key, 0)
-        delay = min(self.backoff_base << f, self.backoff_cap)
+        window = min(self.backoff_base << f, self.backoff_cap)
+        # crc32, not hash(): Python salts str hashes per process, which
+        # would make retry schedules unreproducible across runs
+        jitter = zlib.crc32(f"{kind}/{name}#{f}".encode()) % (window + 1)
+        delay = window + jitter
         self._failures[key] = f + 1
         self._not_before[key] = self._clock + delay
         return delay

@@ -17,7 +17,7 @@ pre-crash leases as stale until their agents re-register.
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
 from ..api.controllers import Controller
 from ..api.objects import (ApiObject, CONDITION_READY, Lease, Node)
@@ -25,7 +25,10 @@ from ..api.objects import (ApiObject, CONDITION_READY, Lease, Node)
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..api.controllers import ControlPlane
 
-__all__ = ["NodeLifecycleController", "lease_state"]
+__all__ = ["DrainController", "NodeLifecycleController", "lease_state"]
+
+# Condition the DrainController maintains on draining nodes.
+CONDITION_DRAINED = "Drained"
 
 
 def lease_state(plane: "ControlPlane", node: str,
@@ -63,7 +66,13 @@ class NodeLifecycleController(Controller):
         fresh, detail = lease_state(plane, node.name)
         if fresh:
             changed = False
-            if node.unschedulable:
+            if node.drain:
+                # draining: cordon plus budget-aware eviction (the
+                # DrainController's job); the node stays Ready so its
+                # inventory survives until the claims have moved
+                changed |= self._set(plane, obj, CONDITION_READY, True,
+                                     "Draining", f"drain requested; {detail}")
+            elif node.unschedulable:
                 # cordoned: inventory stays (running claims keep their
                 # devices) but the scheduler filters the node out
                 changed |= self._set(plane, obj, CONDITION_READY, True,
@@ -83,4 +92,67 @@ class NodeLifecycleController(Controller):
             pool.withdraw_node(node.name)
             plane.sync_inventory()
             changed = True
+        return changed
+
+
+def claims_on_node(plane: "ControlPlane", node: str) -> List[ApiObject]:
+    """Claims currently holding allocated devices on ``node``."""
+    out = []
+    for obj in plane.store.list_objects("ResourceClaim"):
+        claim = obj.spec
+        if claim.allocated and any(a.ref.node == node
+                                   for a in claim.allocation.devices):
+            out.append(obj)
+    return out
+
+
+class DrainController(Controller):
+    """Budget-aware voluntary eviction for ``Node.drain`` spec edits.
+
+    ``kubectl drain`` as a declarative controller: while a node's spec
+    asks for a drain, every claim holding its devices is evicted
+    through the rollout plane's voluntary path — one
+    :func:`~repro.rollout.budget.disruption_allowed` check per claim,
+    so a DisruptionBudget can hold evictions back until replacement
+    replicas (re-placed onto schedulable nodes by the scheduler, which
+    filters draining nodes out) are ready. A blocked drain reports
+    ``BudgetBlocked`` — a retryable reason, so readmission rides the
+    jittered per-object backoff instead of hammering every claim event
+    — and finishes with ``Drained=True`` once nothing holds the node's
+    devices.
+    """
+
+    kind = "Node"
+    name = "drain-controller"
+
+    def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
+        from ..rollout.budget import disruption_allowed, evict_claim_locked
+        node: Node = obj.spec
+        if not node.drain:
+            if obj.condition(CONDITION_DRAINED) is None:
+                return False
+            return self._set(plane, obj, CONDITION_DRAINED, False,
+                             "NotRequested", "node spec does not ask "
+                             "for a drain")
+        holding = claims_on_node(plane, node.name)
+        if not holding:
+            return self._set(plane, obj, CONDITION_DRAINED, True, "Drained",
+                             "no claims hold devices on this node")
+        changed = False
+        blocked_by = ""
+        for cobj in holding:
+            allowed, budget = disruption_allowed(plane, cobj)
+            if allowed:
+                changed |= evict_claim_locked(plane, cobj.meta.name)
+                plane.queue.add("ResourceClaim", cobj.meta.name)
+            else:
+                blocked_by = blocked_by or budget
+        if blocked_by:
+            changed |= self._set(
+                plane, obj, CONDITION_DRAINED, False, "BudgetBlocked",
+                f"eviction blocked by DisruptionBudget {blocked_by!r}")
+        else:
+            changed |= self._set(
+                plane, obj, CONDITION_DRAINED, False, "Evicting",
+                "claims are being evicted and re-placed")
         return changed

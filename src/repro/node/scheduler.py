@@ -440,8 +440,8 @@ class SchedulerController(Controller):
         infos = []
         for obj in plane.store.list_objects("Node"):
             node: Node = obj.spec
-            if node.unschedulable or not obj.is_true(CONDITION_READY,
-                                                     current=True):
+            if (node.unschedulable or node.drain
+                    or not obj.is_true(CONDITION_READY, current=True)):
                 continue
             free: Dict[str, List[Device]] = {}
             for req in claim.spec.requests:

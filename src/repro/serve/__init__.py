@@ -1,1 +1,2 @@
 from .engine import ServeEngine, Request
+from .slo import SloTracker

@@ -1,0 +1,74 @@
+"""SloTracker: per-arm serving telemetry for canary verdicts.
+
+The serve plane observes request latencies and errors per *arm*
+("baseline" for claims on the workload's base revision, "canary" for
+the overlay revision) and publishes deterministic aggregates into the
+workload's ``outputs["slo"]`` — the telemetry surface
+:class:`~repro.rollout.canary.CanaryController` judges against its SLO
+ceilings. Aggregation is exact and order-insensitive (sorted-percentile
+over the retained window), so a pinned request trace always produces
+the same verdict: canary rollback is replayable.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, List
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from ..api.controllers import ControlPlane
+
+__all__ = ["SloTracker"]
+
+ARM_BASELINE = "baseline"
+ARM_CANARY = "canary"
+
+
+def _p95(samples: List[float]) -> float:
+    """Deterministic p95: nearest-rank over the sorted sample set."""
+    ordered = sorted(samples)
+    return ordered[int(0.95 * (len(ordered) - 1))]
+
+
+class SloTracker:
+    """Accumulates per-arm observations; publishes workload SLO status.
+
+    ``observe(arm, latency_ms, error=...)`` is the ingest path (one call
+    per served request); :meth:`publish` writes the snapshot into the
+    workload's status outputs under ``"slo"`` so controllers see it as a
+    level-triggered status edge.
+    """
+
+    def __init__(self, window: int = 256) -> None:
+        self.window = window
+        self._latencies: Dict[str, List[float]] = {}
+        self._errors: Dict[str, int] = {}
+        self._totals: Dict[str, int] = {}
+
+    def observe(self, arm: str, latency_ms: float,
+                error: bool = False) -> None:
+        lat = self._latencies.setdefault(arm, [])
+        lat.append(float(latency_ms))
+        if len(lat) > self.window:
+            del lat[:len(lat) - self.window]
+        self._totals[arm] = self._totals.get(arm, 0) + 1
+        if error:
+            self._errors[arm] = self._errors.get(arm, 0) + 1
+
+    def arm_snapshot(self, arm: str) -> Dict[str, float]:
+        total = self._totals.get(arm, 0)
+        lat = self._latencies.get(arm, [])
+        return {
+            "samples": total,
+            "p95_latency_ms": _p95(lat) if lat else 0.0,
+            "error_rate": (self._errors.get(arm, 0) / total) if total else 0.0,
+        }
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {arm: self.arm_snapshot(arm) for arm in sorted(self._totals)}
+
+    def publish(self, plane: "ControlPlane", workload: str) -> None:
+        """Write the current snapshot into the workload's status outputs."""
+        snap = self.snapshot()
+        plane.store.update_status(
+            "Workload", workload,
+            lambda st: st.outputs.__setitem__("slo", snap))

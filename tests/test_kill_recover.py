@@ -34,3 +34,61 @@ def test_sigkill_mid_churn_then_byte_identical_adoption():
     asserts live in the shared implementation)."""
     smoke = _load_smoke()
     assert smoke.parent() == 0
+
+
+def test_rollout_state_survives_kill_and_recover(tmp_path):
+    """A rolling update interrupted by an injected crash mid-step must
+    resume from the WAL: revision labels survive recovery, the restarted
+    plane finishes the SAME rollout (no name collisions, no restart from
+    scratch), and the rollout monitor stays clean across both lives."""
+    from repro.api import ControlPlane, FaultInjector, Workload
+    from repro.api import chaos as chaos_hooks
+    from repro.core import ClaimSpec, DeviceRequest, ResourceClaimTemplate
+    from repro.rollout import RolloutMonitor
+    from repro.rollout.strategy import REVISION_LABEL
+
+    from conftest import make_tpu_plane, make_tpu_registry
+
+    plane = make_tpu_plane(state_dir=str(tmp_path / "s"))
+    monitor = RolloutMonitor().attach(plane)
+    plane.submit(ResourceClaimTemplate(name="rep", spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips",
+                                device_class="tpu.google.com", count=1)],
+        topology_scope="cluster")))
+    plane.submit(Workload(claim_template="rep", replicas=3, role="serve",
+                          max_surge=1, max_unavailable=0), name="srv")
+    plane.wait_for("Workload", "srv")
+    before = {o.meta.name: o.meta.labels.get(REVISION_LABEL)
+              for o in plane.store.list_objects("ResourceClaim")}
+
+    # start a rolling update and crash on the FIRST replacement stamp:
+    # the WAL now holds a half-rolled world (old revision + maybe one
+    # surge claim), the worst recovery point
+    plane.edit("Workload", "srv",
+               lambda w: w.runtime_config.update({"batch": 64}))
+    injector = FaultInjector(seed=3, kill_prob=1.0, max_kills=1,
+                             kill_points=("rollout.stamp",), delay_prob=0.0)
+    with chaos_hooks.installed(injector):
+        with pytest.raises(chaos_hooks.InjectedFault):
+            plane.reconcile()
+    assert injector.kills == 1
+    plane.journal.sync()
+
+    cluster, reg = make_tpu_registry()
+    plane2 = ControlPlane.recover(str(tmp_path / "s"), reg, cluster,
+                                  resume_journal=False)
+    monitor2 = RolloutMonitor().attach(plane2)
+    recovered = {o.meta.name: o.meta.labels.get(REVISION_LABEL)
+                 for o in plane2.store.list_objects("ResourceClaim")}
+    # the pre-crash claims (labels included) came back from the WAL
+    for name, rev in before.items():
+        assert recovered.get(name) == rev, \
+            f"claim {name} lost its revision label across recovery"
+    plane2.wait_for("Workload", "srv")
+    final = {o.meta.labels.get(REVISION_LABEL)
+             for o in plane2.store.list_objects("ResourceClaim")}
+    names = [o.meta.name for o in plane2.store.list_objects("ResourceClaim")]
+    assert len(names) == len(set(names)) == 3      # no collisions
+    assert len(final) == 1                          # rollout finished
+    assert final != set(before.values()), "rollout restarted from scratch"
+    monitor2.assert_clean()

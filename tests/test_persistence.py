@@ -720,7 +720,8 @@ def _all_fields_samples():
     from repro.core.attributes import AttributeSet, Quantity, Version
     from repro.core.claims import AllocatedDevice
     from repro.core.oci import AttachmentSpec, DeviceBinding
-    from repro.api.objects import Condition as Cond, Lease, Node, ObjectMeta
+    from repro.api.objects import (CanaryRollout, Condition as Cond,
+                                   DisruptionBudget, Lease, Node, ObjectMeta)
 
     ref = DeviceRef(driver="tpu.google.com", pool="pod0",
                     name="chip_1_2", node="host-3")
@@ -776,9 +777,19 @@ def _all_fields_samples():
         # "all fields set" means every *settable-together* field
         "Workload": Workload(claim="c-meta", axes=[AxisSpec("data", 2, "y")],
                              placement="compact", seed=11, role="serve",
-                             replicas=3, build_mesh=False),
+                             replicas=3, build_mesh=False,
+                             max_surge=2, max_unavailable=1,
+                             runtime_config={"batch": 8},
+                             canary_config={"batch": 16},
+                             canary_replicas=1),
         "Node": Node(name="host-3", provider="agent-host-3-xyz",
-                     unschedulable=True, pod=2),
+                     unschedulable=True, drain=True, pod=2),
+        "DisruptionBudget": DisruptionBudget(
+            name="pdb-serve", selector={"workload": "w"}, min_available=2),
+        "CanaryRollout": CanaryRollout(
+            name="canary-1", workload="w", config={"batch": 16},
+            replicas=2, slo={"p95_latency_ms": 40.0, "error_rate": 0.01},
+            min_samples=16),
         "Lease": Lease(name="host-3", holder="agent-host-3-xyz",
                        duration_s=0.75, acquired=123.25),
         "AxisSpec": AxisSpec("model", 4, "x"),

@@ -1,0 +1,627 @@
+"""Rollout plane: rolling updates, budgets, drain/cordon, canary.
+
+Three layers of verification:
+
+* pure-math unit tests over :func:`repro.rollout.strategy.plan_rollout`
+  (the bounded-step invariants as properties);
+* deterministic end-to-end arms on the inline plane with a
+  :class:`~repro.rollout.monitor.RolloutMonitor` journal hook attached —
+  the surge/availability/budget bounds are asserted at EVERY observable
+  store state, not just fixpoints;
+* seeded chaos arms: threaded runtime + worker kills at the new
+  ``rollout.*`` sync points + node SIGKILL mid-rollout, converged state
+  compared against the single-threaded inline oracle.
+"""
+
+import json
+import random
+import threading
+
+import pytest
+
+from repro.api import (CanaryRollout, ControlPlane, ControlPlaneRuntime,
+                       DisruptionBudget, FaultInjector, Workload,
+                       CONDITION_ALLOCATED, CONDITION_READY)
+from repro.api import chaos as chaos_hooks
+from repro.api.objects import Node
+from repro.core import ClaimSpec, DeviceRequest, ResourceClaimTemplate
+from repro.node.lifecycle import CONDITION_DRAINED
+from repro.rollout import (RolloutMonitor, disruption_allowed, plan_rollout,
+                           revision_hash)
+from repro.rollout.canary import (PHASE_DEPLOYED, PHASE_PROMOTED,
+                                  PHASE_ROLLED_BACK, spec_blob)
+from repro.rollout.strategy import REVISION_LABEL, desired_revisions
+from repro.serve.slo import SloTracker
+
+from chaos import assert_pool_consistent, watchdog
+from conftest import (chip_claim, make_node_world, make_tpu_plane,
+                      renew_alive)
+
+
+def rep_template(name="rep", count=1):
+    return ResourceClaimTemplate(name=name, spec=ClaimSpec(
+        requests=[DeviceRequest(name="chips",
+                                device_class="tpu.google.com", count=count)],
+        topology_scope="cluster"))
+
+
+def submit_replicaset(plane, *, replicas=3, max_surge=1, max_unavailable=0,
+                      runtime_config=None, name="srv", count=1):
+    plane.submit(rep_template(count=count))
+    plane.submit(Workload(claim_template="rep", replicas=replicas,
+                          role="serve", max_surge=max_surge,
+                          max_unavailable=max_unavailable,
+                          runtime_config=dict(runtime_config or {})),
+                 name=name)
+    return plane.wait_for("Workload", name)
+
+
+def revisions_of(plane, workload="srv"):
+    out = {}
+    for obj in plane.store.list_objects("ResourceClaim",
+                                        selector={"workload": workload}):
+        rev = obj.meta.labels.get(REVISION_LABEL, "")
+        out[rev] = out.get(rev, 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan_rollout unit semantics (pure math, no store)
+# ---------------------------------------------------------------------------
+
+class TestPlanRollout:
+    def test_fresh_set_stamps_up_to_surge_ceiling(self):
+        plan = plan_rollout([], {"r1": 5}, replicas=5, max_surge=2,
+                            max_unavailable=0)
+        assert plan.stamp == {"r1": 5}          # deficit < ceiling
+        assert not plan.delete_free and not plan.delete_bounded
+
+    def test_rolling_replacement_respects_both_bounds(self):
+        claims = [(f"c{i}", "old", True) for i in range(4)]
+        plan = plan_rollout(claims, {"new": 4}, replicas=4, max_surge=1,
+                            max_unavailable=0)
+        # surge: 4 + 1 stamp == ceiling; availability: no ready delete
+        assert plan.stamp == {"new": 1}
+        assert plan.delete_bounded == []
+
+    def test_old_ready_deleted_once_replacement_ready(self):
+        claims = [("a", "old", True), ("b", "old", True),
+                  ("n0", "new", True)]
+        plan = plan_rollout(claims, {"new": 2}, replicas=2, max_surge=1,
+                            max_unavailable=0)
+        # 3 ready, floor 2: exactly one old delete is admitted, which
+        # frees room under the surge ceiling for the second replacement
+        assert plan.delete_bounded == ["a"]
+        assert plan.stamp == {"new": 1}
+
+    def test_not_ready_claims_delete_free(self):
+        claims = [("a", "old", False), ("b", "new", True)]
+        plan = plan_rollout(claims, {"new": 1}, replicas=1, max_surge=1,
+                            max_unavailable=0)
+        assert plan.delete_free == ["a"]
+
+    def test_max_unavailable_admits_deeper_deletes(self):
+        claims = [(f"c{i}", "old", True) for i in range(4)]
+        plan = plan_rollout(claims, {"new": 4}, replicas=4, max_surge=0,
+                            max_unavailable=2)
+        assert len(plan.delete_bounded) == 2
+        assert plan.stamp == {"new": 2}
+
+    def test_deterministic_ordering(self):
+        claims = [("b", "old", True), ("a", "old", True),
+                  ("c", "old", False)]
+        p1 = plan_rollout(claims, {"new": 3}, replicas=3, max_surge=1,
+                          max_unavailable=1)
+        p2 = plan_rollout(list(reversed(claims)), {"new": 3}, replicas=3,
+                          max_surge=1, max_unavailable=1)
+        assert (p1.delete_free, p1.delete_bounded, p1.stamp) == \
+               (p2.delete_free, p2.delete_bounded, p2.stamp)
+
+    def test_converged_requires_exact_counts_and_all_ready(self):
+        ok = [("a", "r", True), ("b", "r", True)]
+        assert plan_rollout(ok, {"r": 2}, replicas=2, max_surge=1,
+                            max_unavailable=0).converged
+        assert not plan_rollout([("a", "r", False), ("b", "r", True)],
+                                {"r": 2}, replicas=2, max_surge=1,
+                                max_unavailable=0).converged
+
+    def test_every_simulated_schedule_preserves_bounds(self):
+        """Property test: apply plans step by step from random mixed
+        states; after every single simulated write both bounds hold."""
+        rng = random.Random(7)
+        for trial in range(200):
+            replicas = rng.randint(1, 5)
+            surge = rng.randint(0, 2)
+            unavail = rng.randint(0, 2)
+            if surge + unavail == 0:
+                surge = 1
+            claims = {f"c{i}": ("old", True)
+                      for i in range(rng.randint(0, replicas + surge))}
+            desired = {"new": replicas}
+            serial = 0
+            for _step in range(12):
+                obs = [(n, rev, rdy) for n, (rev, rdy) in claims.items()]
+                plan = plan_rollout(obs, desired, replicas=replicas,
+                                    max_surge=surge, max_unavailable=unavail)
+                if plan.idle:
+                    break
+                floor = replicas - unavail
+                ceiling = replicas + surge
+
+                def check(note):
+                    ready = sum(r for _, r in claims.values())
+                    assert len(claims) <= ceiling, (trial, note, claims)
+                    assert ready >= min(floor, ready), (trial, note)
+
+                for name in plan.delete_free + plan.delete_bounded:
+                    was_ready = claims[name][1]
+                    pre_ready = sum(r for _, r in claims.values())
+                    del claims[name]
+                    if was_ready:
+                        assert pre_ready - 1 >= floor, (trial, name)
+                    check("delete")
+                for rev, cnt in plan.stamp.items():
+                    for _ in range(cnt):
+                        claims[f"s{serial}"] = (rev, False)
+                        serial += 1
+                        check("stamp")
+                # stamped replicas come up ready before the next step
+                claims = {n: (rev, True) for n, (rev, rdy) in claims.items()}
+
+    def test_desired_revisions_canary_overlay(self):
+        wl = Workload(claim_template="rep", replicas=4, role="serve",
+                      runtime_config={"batch": 8},
+                      canary_config={"batch": 16}, canary_replicas=1)
+        desired = desired_revisions(wl, 3)
+        base = revision_hash(3, {"batch": 8})
+        canary = revision_hash(3, {"batch": 16})
+        assert desired == {base: 3, canary: 1}
+        # promotion folds the overlay in: revisions collapse
+        wl2 = Workload(claim_template="rep", replicas=4, role="serve",
+                       runtime_config={"batch": 16})
+        assert desired_revisions(wl2, 3) == {canary: 4}
+
+
+# ---------------------------------------------------------------------------
+# End-to-end rolling updates (inline plane, monitor at every event)
+# ---------------------------------------------------------------------------
+
+class TestRollingUpdate:
+    def test_config_edit_rolls_all_replicas_bounded(self):
+        plane = make_tpu_plane()
+        monitor = RolloutMonitor().attach(plane)
+        submit_replicaset(plane, replicas=3, max_surge=1, max_unavailable=0)
+        old = revisions_of(plane)
+        assert len(old) == 1 and sum(old.values()) == 3
+        plane.edit("Workload", "srv",
+                   lambda w: w.runtime_config.update({"batch": 16}))
+        obj = plane.wait_for("Workload", "srv")
+        assert obj.is_true(CONDITION_READY, current=True)
+        new = revisions_of(plane)
+        assert len(new) == 1 and sum(new.values()) == 3
+        assert set(new) != set(old), "revision did not change"
+        monitor.assert_clean()
+        assert monitor.events_seen > 0
+        assert_pool_consistent(plane)
+
+    def test_template_edit_triggers_rolling_replacement(self):
+        plane = make_tpu_plane()
+        monitor = RolloutMonitor().attach(plane)
+        submit_replicaset(plane, replicas=2, max_surge=1, max_unavailable=0)
+        old_names = {o.meta.name for o in plane.store.list_objects(
+            "ResourceClaim")}
+        plane.edit("ResourceClaimTemplate", "rep",
+                   lambda t: setattr(t.spec.requests[0], "count", 2))
+        plane.wait_for("Workload", "srv")
+        new_names = {o.meta.name for o in plane.store.list_objects(
+            "ResourceClaim")}
+        assert old_names.isdisjoint(new_names), "claims were not replaced"
+        for obj in plane.store.list_objects("ResourceClaim"):
+            assert len(obj.spec.allocation.devices) == 2
+        monitor.assert_clean()
+
+    def test_scaling_is_not_an_update(self):
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=2)
+        rev_before = set(revisions_of(plane))
+        before = {o.meta.name for o in plane.store.list_objects(
+            "ResourceClaim")}
+        plane.edit("Workload", "srv", lambda w: setattr(w, "replicas", 4))
+        plane.wait_for("Workload", "srv")
+        after = {o.meta.name for o in plane.store.list_objects(
+            "ResourceClaim")}
+        assert before < after                     # originals survived
+        assert set(revisions_of(plane)) == rev_before
+
+    def test_rolling_status_surfaces_mid_update(self):
+        """While counts are still converging the workload reports the
+        rollout (RollingUpdate) instead of flapping Ready."""
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=3)
+        out = plane.store.get("Workload", "srv").status.outputs["rollout"]
+        assert out["converged"] is True
+        assert out["ready"] == 3
+        assert list(out["revisions"].values()) == [3]
+
+    def test_surge_zero_unavailable_bound_requires_budget(self):
+        with pytest.raises(Exception):
+            Workload(claim_template="rep", replicas=2, role="serve",
+                     max_surge=0, max_unavailable=0)
+
+
+# ---------------------------------------------------------------------------
+# DisruptionBudget + drain/cordon (node world)
+# ---------------------------------------------------------------------------
+
+def node_of(plane, claim_name):
+    obj = plane.store.get("ResourceClaim", claim_name)
+    nodes = {a.ref.node for a in obj.spec.allocation.devices}
+    assert len(nodes) == 1
+    return nodes.pop()
+
+
+class TestDrainAndBudgets:
+    def test_drain_evicts_and_reschedules_claims(self):
+        plane, nplane, clock = make_node_world()
+        monitor = RolloutMonitor().attach(plane)
+        plane.submit(chip_claim("c", 2))
+        plane.reconcile()
+        victim = node_of(plane, "c")
+        plane.edit("Node", victim, lambda n: setattr(n, "drain", True))
+        plane.reconcile()
+        # the claim healed onto another node through the normal path
+        obj = plane.store.get("ResourceClaim", "c")
+        assert obj.is_true(CONDITION_ALLOCATED, current=True)
+        assert node_of(plane, "c") != victim
+        nobj = plane.store.get("Node", victim)
+        assert nobj.is_true(CONDITION_DRAINED, current=True)
+        assert nobj.condition(CONDITION_READY).reason == "Draining"
+        monitor.assert_clean()
+        assert_pool_consistent(plane)
+
+    def test_drained_node_keeps_inventory_until_evicted(self):
+        plane, nplane, clock = make_node_world()
+        plane.reconcile()
+        node = sorted(nplane.agents)[0]
+        plane.edit("Node", node, lambda n: setattr(n, "drain", True))
+        plane.reconcile()
+        # drain with nothing to evict: inventory intact, Drained=True
+        assert any(s.node == node for s in plane.registry.pool.slices)
+        assert plane.store.get("Node", node).is_true(
+            CONDITION_DRAINED, current=True)
+        # and the scheduler refuses new placements on it
+        plane.submit(chip_claim("c", 4))
+        plane.reconcile()
+        placed = plane.store.get("ResourceClaim", "c").status.outputs[
+            "scheduled_nodes"]
+        assert node not in placed
+
+    def test_budget_blocks_drain_until_capacity_recovers(self):
+        plane, nplane, clock = make_node_world()
+        monitor = RolloutMonitor().attach(plane)
+        submit_replicaset(plane, replicas=3, max_surge=1)
+        plane.submit(DisruptionBudget(name="pdb",
+                                      selector={"workload": "srv"},
+                                      min_available=3))
+        plane.reconcile()
+        victim = node_of(plane, sorted(
+            o.meta.name for o in plane.store.list_objects(
+                "ResourceClaim", selector={"workload": "srv"}))[0])
+        plane.edit("Node", victim, lambda n: setattr(n, "drain", True))
+        plane.reconcile()
+        nobj = plane.store.get("Node", victim)
+        cond = nobj.condition(CONDITION_DRAINED)
+        # every replica is protected: the drain must report itself blocked
+        assert not cond.true and cond.reason == "BudgetBlocked"
+        assert "pdb" in cond.message
+        # relax the budget: the drain proceeds and the claims re-place
+        plane.edit("DisruptionBudget", "pdb",
+                   lambda b: setattr(b, "min_available", 1))
+        plane.reconcile()
+        plane.wait_for("Workload", "srv")
+        nobj = plane.store.get("Node", victim)
+        assert nobj.is_true(CONDITION_DRAINED, current=True), \
+            nobj.conditions_summary()
+        monitor.assert_clean()
+        assert_pool_consistent(plane)
+
+    def test_budget_controller_publishes_status(self):
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=3)
+        plane.submit(DisruptionBudget(name="pdb",
+                                      selector={"workload": "srv"},
+                                      min_available=2))
+        plane.reconcile()
+        bobj = plane.store.get("DisruptionBudget", "pdb")
+        out = bobj.status.outputs["budget"]
+        assert out == {"matched": 3, "ready": 3, "disruptions_allowed": 1}
+        assert bobj.is_true(CONDITION_READY, current=True)
+
+    def test_disruption_allowed_gates_on_every_matching_budget(self):
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=2)
+        plane.submit(DisruptionBudget(name="loose",
+                                      selector={"workload": "srv"},
+                                      min_available=0))
+        plane.submit(DisruptionBudget(name="tight",
+                                      selector={"workload": "srv"},
+                                      min_available=2))
+        plane.reconcile()
+        cobj = plane.store.list_objects("ResourceClaim",
+                                        selector={"workload": "srv"})[0]
+        ok, blocker = disruption_allowed(plane, cobj)
+        assert not ok and blocker == "tight"
+
+
+# ---------------------------------------------------------------------------
+# Canary + SLO auto-rollback
+# ---------------------------------------------------------------------------
+
+def make_canary_world(*, replicas=3, canary_replicas=1, slo=None):
+    plane = make_tpu_plane()
+    monitor = RolloutMonitor().attach(plane)
+    submit_replicaset(plane, replicas=replicas, max_surge=1,
+                      runtime_config={"batch": 8})
+    prior = spec_blob(plane.store.get("Workload", "srv").spec)
+    plane.submit(CanaryRollout(
+        name="cr", workload="srv", config={"batch": 32},
+        replicas=canary_replicas,
+        slo=dict(slo or {"p95_latency_ms": 50.0, "error_rate": 0.02}),
+        min_samples=4))
+    plane.reconcile()
+    return plane, monitor, prior
+
+
+def feed_slo(plane, *, p95, errors=0, samples=8):
+    tracker = SloTracker()
+    for i in range(samples):
+        tracker.observe("baseline", 10.0)
+        tracker.observe("canary", p95, error=i < errors)
+    tracker.publish(plane, "srv")
+    plane.reconcile()
+    return tracker
+
+
+class TestCanary:
+    def test_canary_deploys_overlay_revision(self):
+        plane, monitor, _prior = make_canary_world()
+        cobj = plane.store.get("CanaryRollout", "cr")
+        assert cobj.status.outputs["canary"]["phase"] == PHASE_DEPLOYED
+        assert cobj.condition(CONDITION_READY).reason == "CollectingSamples"
+        revs = revisions_of(plane)
+        assert len(revs) == 2 and sorted(revs.values()) == [1, 2]
+        wl = plane.store.get("Workload", "srv")
+        out = wl.status.outputs["rollout"]
+        assert out["canary_revision"] in revs
+        monitor.assert_clean()
+
+    def test_slo_breach_rolls_back_byte_identically(self):
+        plane, monitor, prior = make_canary_world()
+        feed_slo(plane, p95=500.0)             # ceiling 50ms: breach
+        plane.wait_for("Workload", "srv")
+        cobj = plane.store.get("CanaryRollout", "cr")
+        state = cobj.status.outputs["canary"]
+        assert state["phase"] == PHASE_ROLLED_BACK
+        assert state["verdict"]["metric"] == "p95_latency_ms"
+        assert cobj.condition(CONDITION_READY).reason == "RolledBack"
+        # the tentpole guarantee: the restored spec is byte-identical
+        assert spec_blob(plane.store.get("Workload", "srv").spec) == prior
+        assert len(revisions_of(plane)) == 1
+        monitor.assert_clean()
+
+    def test_error_rate_breach_also_rolls_back(self):
+        plane, _monitor, prior = make_canary_world()
+        feed_slo(plane, p95=10.0, errors=4)    # 50% errors vs 2% ceiling
+        plane.wait_for("Workload", "srv")
+        state = plane.store.get("CanaryRollout", "cr") \
+            .status.outputs["canary"]
+        assert state["phase"] == PHASE_ROLLED_BACK
+        assert state["verdict"]["metric"] == "error_rate"
+        assert spec_blob(plane.store.get("Workload", "srv").spec) == prior
+
+    def test_healthy_canary_promotes_and_claims_survive(self):
+        plane, monitor, _prior = make_canary_world()
+        canary_claims = {
+            o.meta.name for o in plane.store.list_objects("ResourceClaim")
+            if o.meta.labels.get(REVISION_LABEL)
+            == plane.store.get("Workload", "srv")
+            .status.outputs["rollout"]["canary_revision"]}
+        assert canary_claims
+        feed_slo(plane, p95=10.0)              # well inside ceilings
+        plane.wait_for("Workload", "srv")
+        cobj = plane.store.get("CanaryRollout", "cr")
+        assert cobj.status.outputs["canary"]["phase"] == PHASE_PROMOTED
+        wl = plane.store.get("Workload", "srv").spec
+        assert wl.runtime_config == {"batch": 32}
+        assert wl.canary_replicas == 0 and wl.canary_config == {}
+        survivors = {o.meta.name
+                     for o in plane.store.list_objects("ResourceClaim")}
+        # promotion makes base rev == canary rev: canary claims survive
+        assert canary_claims <= survivors
+        assert len(revisions_of(plane)) == 1
+        monitor.assert_clean()
+
+    def test_rollback_is_deterministic_across_runs(self):
+        """Pinned seeds/pinned traces: two independent worlds make the
+        same verdict and restore byte-identical specs."""
+        blobs, phases = [], []
+        for _run in range(2):
+            plane, _m, prior = make_canary_world()
+            feed_slo(plane, p95=500.0)
+            plane.wait_for("Workload", "srv")
+            state = plane.store.get("CanaryRollout", "cr") \
+                .status.outputs["canary"]
+            phases.append((state["phase"], state["verdict"]["metric"]))
+            blobs.append((prior,
+                          spec_blob(plane.store.get("Workload", "srv").spec)))
+        assert phases[0] == phases[1] == (PHASE_ROLLED_BACK,
+                                          "p95_latency_ms")
+        assert blobs[0] == blobs[1]
+        assert all(prior == restored for prior, restored in blobs)
+
+    def test_canary_larger_than_workload_rejected(self):
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=2)
+        plane.submit(CanaryRollout(name="cr", workload="srv",
+                                   config={"batch": 32}, replicas=3))
+        plane.reconcile()
+        cond = plane.store.get("CanaryRollout", "cr") \
+            .condition(CONDITION_READY)
+        assert not cond.true and cond.reason == "CanaryTooLarge"
+
+
+# ---------------------------------------------------------------------------
+# SloTracker unit semantics
+# ---------------------------------------------------------------------------
+
+class TestSloTracker:
+    def test_deterministic_p95_and_error_rate(self):
+        t = SloTracker()
+        for ms in range(1, 101):
+            t.observe("canary", float(ms), error=(ms % 10 == 0))
+        snap = t.arm_snapshot("canary")
+        assert snap["samples"] == 100
+        assert snap["p95_latency_ms"] == 95.0   # nearest-rank, exact
+        assert snap["error_rate"] == 0.1
+
+    def test_window_bounds_retained_latencies(self):
+        t = SloTracker(window=8)
+        for ms in range(100):
+            t.observe("canary", float(ms))
+        snap = t.arm_snapshot("canary")
+        assert snap["samples"] == 100           # totals keep counting
+        assert snap["p95_latency_ms"] >= 92.0   # window holds the tail
+
+    def test_publish_writes_workload_outputs(self):
+        plane = make_tpu_plane()
+        submit_replicaset(plane, replicas=1)
+        t = SloTracker()
+        t.observe("baseline", 5.0)
+        t.observe("canary", 7.0)
+        t.publish(plane, "srv")
+        out = plane.store.get("Workload", "srv").status.outputs["slo"]
+        assert set(out) == {"baseline", "canary"}
+        assert out["canary"]["samples"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Chaos: kills mid-rollout, node SIGKILL, latency injection, oracle
+# ---------------------------------------------------------------------------
+
+CHAOS_SEEDS = (7, 23, 42)
+
+
+def _rollout_chaos_arm(seed, *, kill_prob=0.25, max_kills=4,
+                       latency=None):
+    """Threaded rolling update under seeded kills at rollout.* points;
+    returns (revisions, monitor, plane)."""
+    plane = make_tpu_plane(side=6)
+    monitor = RolloutMonitor().attach(plane)
+    injector = FaultInjector(
+        seed=seed, kill_prob=kill_prob, max_kills=max_kills,
+        kill_points=("rollout.", "runtime.worker."),
+        delay_prob=0.05, max_delay_s=0.002,
+        latency_points=dict(latency or {}))
+    with watchdog(120.0, note=f"rollout chaos seed={seed}"):
+        with chaos_hooks.installed(injector):
+            runtime = ControlPlaneRuntime(plane, workers_per_kind=2,
+                                          max_worker_restarts=4 * max_kills,
+                                          poll_interval_s=0.005)
+            with runtime as rt:
+                rt.submit(rep_template())
+                rt.submit(Workload(claim_template="rep", replicas=4,
+                                   role="serve", max_surge=1,
+                                   max_unavailable=1), name="srv")
+                rt.wait_ready("Workload", "srv", timeout=60.0)
+                rt.edit("Workload", "srv",
+                        lambda w: w.runtime_config.update({"batch": 32}))
+                rt.wait_ready("Workload", "srv", timeout=60.0)
+                if not rt.wait_quiesce(60.0):
+                    raise AssertionError(f"seed {seed}: no quiescence")
+    return revisions_of(plane), monitor, injector, plane
+
+
+@pytest.mark.slow
+class TestRolloutChaos:
+    @pytest.mark.parametrize("seed", CHAOS_SEEDS)
+    def test_rolling_update_survives_worker_kills(self, seed):
+        revs, monitor, injector, plane = _rollout_chaos_arm(seed)
+        monitor.assert_clean()
+        assert_pool_consistent(plane)
+        assert sum(revs.values()) == 4
+        assert len(revs) == 1, f"stale revisions survived: {revs}"
+        # oracle: the same declarative intent on an inline no-fault plane
+        oracle = make_tpu_plane(side=6, reconcile_mode="inline")
+        submit_replicaset(oracle, replicas=4, max_surge=1,
+                          max_unavailable=1,
+                          runtime_config={"batch": 32})
+        oracle_revs = revisions_of(oracle)
+        assert set(revs) == set(oracle_revs), \
+            "threaded run converged to a different revision than the oracle"
+        assert revs == oracle_revs
+
+    def test_latency_injection_slows_named_points(self):
+        revs, monitor, injector, plane = _rollout_chaos_arm(
+            7, kill_prob=0.0, max_kills=0,
+            latency={"rollout.stamp": 0.01})
+        monitor.assert_clean()
+        assert injector.latency_injections > 0
+        assert injector.latency_injected_s > 0.0
+        assert len(revs) == 1 and sum(revs.values()) == 4
+
+    @pytest.mark.parametrize("seed", CHAOS_SEEDS)
+    def test_node_sigkill_mid_rollout_converges_clean(self, seed):
+        """Node death in the middle of a rolling update: the involuntary
+        path (lease expiry -> withdrawal -> heal) composes with the
+        rolling path; budgets and bounds stay unviolated throughout."""
+        plane, nplane, clock = make_node_world()
+        monitor = RolloutMonitor().attach(plane)
+        submit_replicaset(plane, replicas=3, max_surge=1, max_unavailable=1)
+        plane.submit(DisruptionBudget(name="pdb",
+                                      selector={"workload": "srv"},
+                                      min_available=1))
+        plane.reconcile()
+        # start a rolling update, then SIGKILL a node mid-roll
+        plane.edit("Workload", "srv",
+                   lambda w: w.runtime_config.update({"seed": seed}))
+        victim = sorted(nplane.agents)[seed % len(nplane.agents)]
+        nplane.agents[victim].kill()
+        clock[0] += 10.0
+        renew_alive(nplane)
+        plane.reconcile()
+        plane.wait_for("Workload", "srv")
+        revs = revisions_of(plane)
+        assert len(revs) == 1 and sum(revs.values()) == 3
+        for obj in plane.store.list_objects(
+                "ResourceClaim", selector={"workload": "srv"}):
+            assert all(a.ref.node != victim
+                       for a in obj.spec.allocation.devices)
+        monitor.assert_clean()
+        assert_pool_consistent(plane)
+
+    def test_canary_kill_between_phase_and_edit_is_idempotent(self):
+        """Kill exactly at rollout.canary (between the phase write and
+        the workload edit): re-reconcile must land the same place."""
+        plane = make_tpu_plane()
+        monitor = RolloutMonitor().attach(plane)
+        submit_replicaset(plane, replicas=3, max_surge=1,
+                          runtime_config={"batch": 8})
+        prior = spec_blob(plane.store.get("Workload", "srv").spec)
+        injector = FaultInjector(seed=1, kill_prob=1.0, max_kills=1,
+                                 kill_points=("rollout.canary",),
+                                 delay_prob=0.0)
+        with chaos_hooks.installed(injector):
+            plane.submit(CanaryRollout(
+                name="cr", workload="srv", config={"batch": 32},
+                replicas=1, slo={"p95_latency_ms": 50.0}, min_samples=4))
+            with pytest.raises(chaos_hooks.InjectedFault):
+                plane.reconcile()
+            plane.reconcile()          # kill budget spent: converges
+        assert injector.kills == 1
+        feed_slo(plane, p95=500.0)
+        plane.wait_for("Workload", "srv")
+        state = plane.store.get("CanaryRollout", "cr") \
+            .status.outputs["canary"]
+        assert state["phase"] == PHASE_ROLLED_BACK
+        assert spec_blob(plane.store.get("Workload", "srv").spec) == prior
+        monitor.assert_clean()

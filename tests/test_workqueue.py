@@ -63,9 +63,30 @@ class TestWorkQueue:
         assert q.empty and q.failures("ResourceClaim", "gone") == 0
 
     def test_backoff_caps(self):
+        # exponential window 1, 2, 4, 4, ... plus per-key jitter: every
+        # delay lands in [window, 2*window]
         q = WorkQueue(backoff_base=1, backoff_cap=4)
         delays = [q.failure("ResourceClaim", "x") for _ in range(6)]
-        assert delays == [1, 2, 4, 4, 4, 4]
+        windows = [1, 2, 4, 4, 4, 4]
+        for delay, window in zip(delays, windows):
+            assert window <= delay <= 2 * window, (delay, window)
+
+    def test_backoff_jitter_is_deterministic(self):
+        """Same keys + same failure sequence => byte-identical schedules
+        (crc32-keyed jitter, not process-salted hash())."""
+        def schedule():
+            q = WorkQueue(backoff_base=1, backoff_cap=16)
+            return [q.failure("ResourceClaim", f"c{i % 7}")
+                    for i in range(40)]
+        assert schedule() == schedule()
+
+    def test_backoff_jitter_spreads_keys(self):
+        """The anti-thundering-herd property: many objects failing in
+        the same round must NOT all retry in the same round."""
+        q = WorkQueue(backoff_base=4, backoff_cap=64)
+        delays = {q.failure("ResourceClaim", f"c{i}") for i in range(30)}
+        assert len(delays) > 1, "all keys share one retry round (no jitter)"
+        assert all(4 <= d <= 8 for d in delays), delays
 
 
 # ---------------------------------------------------------------------------
