@@ -1,0 +1,219 @@
+"""Serving bench: continuous batching vs the seed fixed-width engine.
+
+An open-loop load generator (arrivals on a fixed schedule, independent
+of completions) drives both serving arms at several concurrency levels
+over a mixed short/long prompt set:
+
+* **continuous** — :class:`repro.serve.engine.ServeEngine`: per-slot
+  clocks over the paged KV pool, chunked prefill, slot recycling;
+* **legacy** — :class:`repro.serve.legacy.LegacyServeEngine`: the seed
+  4-slot fixed-width batcher (token-by-token prefill catch-up, shared
+  scalar clock) as the baseline arm.
+
+Per level and arm: TTFT / TPOT / end-to-end latency p50+p95 (measured
+wall clock per request, not modeled) and token/request throughput.
+The acceptance metric — continuous must beat legacy on tokens/s at the
+highest concurrency with equal slots — lands in ``BENCH_serve.json``
+(merge-updated, like BENCH_reconcile.json), which ci.sh gates on.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_serve.json")
+
+SLOTS = 4
+MAX_LEN = 64
+MAX_NEW = 6
+PREFILL_CHUNK = 8
+# open loop: arrival i lands at i * (BASE_INTERVAL_S / concurrency),
+# independent of completions — the concurrency axis is offered load
+BASE_INTERVAL_S = 0.032
+SHORT_PROMPT = list(range(1, 5))    # 4 tokens
+LONG_PROMPT = list(range(1, 25))    # 24 tokens: where chunked prefill wins
+
+
+def _pct(vals: List[float], q: float) -> float:
+    ordered = sorted(vals)
+    return ordered[int(q * (len(ordered) - 1))] if ordered else 0.0
+
+
+def _prompts(n: int) -> List[List[int]]:
+    # 3:1 long:short — serving traffic is prefill-heavy, and long
+    # prompts are where fixed-width token-by-token catch-up burns slots
+    return [SHORT_PROMPT if i % 4 == 0 else LONG_PROMPT for i in range(n)]
+
+
+def _summarize(ttft: List[float], tpot: List[float], lat: List[float],
+               tokens: int, completed: int, failed: int,
+               wall_s: float) -> Dict[str, float]:
+    return {
+        "completed": completed,
+        "failed": failed,
+        "generated_tokens": tokens,
+        "tokens_per_s": round(tokens / wall_s, 2) if wall_s > 0 else 0.0,
+        "requests_per_s": (round(completed / wall_s, 2)
+                           if wall_s > 0 else 0.0),
+        "p50_ttft_ms": round(_pct(ttft, 0.5), 2),
+        "p95_ttft_ms": round(_pct(ttft, 0.95), 2),
+        "p50_tpot_ms": round(_pct(tpot, 0.5), 2),
+        "p95_tpot_ms": round(_pct(tpot, 0.95), 2),
+        "p50_latency_ms": round(_pct(lat, 0.5), 2),
+        "p95_latency_ms": round(_pct(lat, 0.95), 2),
+    }
+
+
+def _run_continuous(cfg, params, prompts: List[List[int]],
+                    interval_s: float) -> Dict[str, float]:
+    from repro.serve.engine import ServeEngine
+    eng = ServeEngine(cfg, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                      prefill_chunk=PREFILL_CHUNK)
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(prompts) or eng.has_work():
+        now = time.perf_counter() - t0
+        while i < len(prompts) and i * interval_s <= now:
+            eng.submit(prompts[i], max_new_tokens=MAX_NEW)
+            i += 1
+        if not eng.step() and i < len(prompts):
+            time.sleep(interval_s)
+    wall = time.perf_counter() - t0
+    done = eng.completed
+    ttft = [r.ttft_s * 1e3 for r in done if r.ttft_s is not None]
+    tpot = [r.tpot_s * 1e3 for r in done if r.tpot_s is not None]
+    lat = [r.latency_s * 1e3 for r in done if r.latency_s is not None]
+    tokens = sum(len(r.generated) for r in done)
+    return _summarize(ttft, tpot, lat, tokens, len(done), len(eng.failed),
+                      wall)
+
+
+def _run_legacy(cfg, params, prompts: List[List[int]],
+                interval_s: float) -> Dict[str, float]:
+    """The seed arm, instrumented from outside (it has no telemetry):
+    first-token and completion times are read off the engine's visible
+    state after every step."""
+    from repro.serve.legacy import LegacyServeEngine
+    eng = LegacyServeEngine(cfg, params, batch_slots=SLOTS, max_len=MAX_LEN)
+    # warm the per-instance jit outside the measured window
+    eng.submit(SHORT_PROMPT, max_new_tokens=1)
+    eng.run()
+    eng.completed.clear()
+
+    t_submit: Dict[int, float] = {}
+    t_first: Dict[int, float] = {}
+    t_done: Dict[int, float] = {}
+    n_tok: Dict[int, int] = {}
+    seen_done = 0
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(prompts) or eng.pending or any(eng.active):
+        now = time.perf_counter() - t0
+        while i < len(prompts) and i * interval_s <= now:
+            r = eng.submit(prompts[i], max_new_tokens=MAX_NEW)
+            t_submit[r.uid] = now
+            i += 1
+        if not (eng.pending or any(eng.active)):
+            time.sleep(interval_s)
+            continue
+        eng.step()
+        now = time.perf_counter() - t0
+        for r in eng.active:
+            if r is not None and r.generated and r.uid not in t_first:
+                t_first[r.uid] = now
+        for r in eng.completed[seen_done:]:
+            t_first.setdefault(r.uid, now)
+            t_done[r.uid] = now
+            n_tok[r.uid] = len(r.generated)
+        seen_done = len(eng.completed)
+    wall = time.perf_counter() - t0
+    ttft = [(t_first[u] - t_submit[u]) * 1e3 for u in t_done]
+    tpot = [(t_done[u] - t_first[u]) / (n_tok[u] - 1) * 1e3
+            for u in t_done if n_tok[u] > 1]
+    lat = [(t_done[u] - t_submit[u]) * 1e3 for u in t_done]
+    return _summarize(ttft, tpot, lat, sum(n_tok.values()), len(t_done), 0,
+                      wall)
+
+
+def main(argv: Optional[List[str]] = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer concurrency levels / requests")
+    ap.add_argument("--arch", default="yi-34b")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs.registry import smoke_config
+    from repro.models import lm
+    from repro.serve.engine import ServeEngine
+
+    cfg = smoke_config(args.arch).replace(compute_dtype="float32",
+                                          param_dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    # warm the continuous arm's shared traces (C in {1, chunk}, both
+    # prompt classes) outside every measured window
+    warm = ServeEngine(cfg, params, batch_slots=SLOTS, max_len=MAX_LEN,
+                       prefill_chunk=PREFILL_CHUNK)
+    warm.submit(SHORT_PROMPT, max_new_tokens=2)
+    warm.submit(LONG_PROMPT, max_new_tokens=2)
+    warm.run()
+
+    levels = [4, 16] if args.smoke else [2, 4, 8, 16]
+    per_level = (lambda c: 2 * c) if args.smoke else (lambda c: 4 * c)
+    rows = []
+    for conc in levels:
+        prompts = _prompts(per_level(conc))
+        interval = BASE_INTERVAL_S / conc
+        arms = {
+            "continuous": _run_continuous(cfg, params, prompts, interval),
+            "legacy": _run_legacy(cfg, params, prompts, interval),
+        }
+        rows.append({
+            "concurrency": conc,
+            "requests": len(prompts),
+            "arms": arms,
+            "throughput_ratio": round(
+                arms["continuous"]["tokens_per_s"]
+                / max(arms["legacy"]["tokens_per_s"], 1e-9), 3),
+        })
+
+    top = rows[-1]
+    result = {
+        "config": {"arch": cfg.name, "slots": SLOTS, "max_len": MAX_LEN,
+                   "max_new_tokens": MAX_NEW,
+                   "prefill_chunk": PREFILL_CHUNK,
+                   "prompt_lens": [len(SHORT_PROMPT), len(LONG_PROMPT)],
+                   "base_arrival_interval_ms": BASE_INTERVAL_S * 1e3,
+                   "smoke": bool(args.smoke)},
+        "levels": rows,
+        "acceptance": {
+            "top_concurrency": top["concurrency"],
+            "throughput_ratio_at_top": top["throughput_ratio"],
+            "continuous_beats_legacy_at_top": top["throughput_ratio"] > 1.0,
+        },
+    }
+
+    merged: dict = {}
+    if os.path.exists(BENCH_JSON):      # update, never clobber other runs
+        try:
+            with open(BENCH_JSON) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged["serve"] = result
+    with open(BENCH_JSON, "w") as f:
+        json.dump(merged, f, indent=1)
+        f.write("\n")
+    return result
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=1))

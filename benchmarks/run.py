@@ -23,9 +23,14 @@ Framework perf:
   bench_scheduler  -> node-plane scheduler: placement throughput,
                       aligned-vs-random predicted all-reduce time,
                       node-death -> Ready recovery latency
+  bench_serve      -> serving data plane: open-loop TTFT/TPOT/throughput
+                      percentiles vs concurrency, continuous batching
+                      vs the seed fixed-width arm; writes
+                      BENCH_serve.json
 
 The control-plane sections write ``BENCH_reconcile.json`` at the repo
-root — the perf trajectory CI and reviewers diff across PRs.
+root (bench_serve writes ``BENCH_serve.json``) — the perf trajectory
+CI and reviewers diff across PRs.
 """
 
 from __future__ import annotations
@@ -74,8 +79,8 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "recovery", "informer", "scheduler", "rollout", "roofline",
-            "kernels"]
+            "recovery", "informer", "scheduler", "rollout", "serve",
+            "roofline", "kernels"]
 
 
 def main() -> None:
@@ -125,6 +130,12 @@ def main() -> None:
             perf["rollout"] = bench_rollout.main(
                 ["--smoke"] if args.smoke else [])
             print(json.dumps(perf["rollout"], indent=1))
+        elif section == "serve":
+            from . import bench_serve
+            # writes/merges BENCH_serve.json itself (its own artifact,
+            # separate from the control-plane BENCH_reconcile.json)
+            result = bench_serve.main(["--smoke"] if args.smoke else [])
+            print(json.dumps(result, indent=1))
         elif section == "roofline":
             from . import bench_roofline
             bench_roofline.main()

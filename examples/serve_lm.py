@@ -1,4 +1,4 @@
-"""Serve a small model with batched requests (continuous-batching lite).
+"""Serve a small model with continuous batching (paged KV, chunked prefill).
 
   PYTHONPATH=src python examples/serve_lm.py
 """
@@ -14,20 +14,24 @@ from repro.serve.engine import ServeEngine
 
 cfg = smoke_config("hymba-1.5b")   # hybrid: exercises KV + SSD caches
 params = lm.init_params(cfg, jax.random.PRNGKey(0))
-engine = ServeEngine(cfg, params, batch_slots=4, max_len=128)
+engine = ServeEngine(cfg, params, batch_slots=4, max_len=128,
+                     prefill_chunk=8)
 
 rng = np.random.RandomState(0)
-print(f"serving {cfg.name} (smoke config), 4 slots")
+print(f"serving {cfg.name} (smoke config), 4 slots, prefill chunk 8")
 for i in range(10):
     n = int(rng.randint(4, 12))
     engine.submit(rng.randint(0, cfg.vocab_size, size=n).tolist(),
                   max_new_tokens=12, temperature=0.8 if i % 2 else 0.0)
 
 t0 = time.time()
-done = engine.run()
+finished = engine.run()
 dt = time.time() - t0
+done = [r for r in finished if r.done]
 tok = sum(len(r.generated) for r in done)
-print(f"completed {len(done)} requests, {tok} tokens in {dt:.1f}s "
-      f"({tok / dt:.1f} tok/s CPU)")
+print(f"completed {len(done)}/{len(finished)} requests, {tok} tokens "
+      f"in {dt:.1f}s ({tok / dt:.1f} tok/s CPU)")
 for r in done[:3]:
-    print(f"  req {r.uid}: prompt[:4]={r.prompt[:4]} -> {r.generated[:8]}")
+    ttft = 0.0 if r.ttft_s is None else r.ttft_s * 1e3
+    print(f"  req {r.uid}: prompt[:4]={r.prompt[:4]} -> {r.generated[:8]} "
+          f"(ttft {ttft:.0f}ms)")

@@ -138,4 +138,26 @@ print("rollout:",
       "rollback_s", r["canary"]["rollback_s"])
 '
 
+echo "== smoke: serve bench (reduced sizes, merged into BENCH_serve.json) =="
+# continuous batching must beat the seed fixed-width engine on tokens/s
+# at the top concurrency level with equal slots — the serving data
+# plane's acceptance metric; percentiles land in BENCH_serve.json
+python -m benchmarks.run --only serve --smoke \
+  | python -c '
+import json, sys
+blob = sys.stdin.read()
+r = json.loads(blob[blob.index("{"):blob.rindex("}") + 1])
+acc = r["acceptance"]
+assert acc["continuous_beats_legacy_at_top"], \
+    f"continuous batching lost to the seed fixed-width arm: {acc}"
+top = r["levels"][-1]["arms"]
+print("serve:",
+      "concurrency", acc["top_concurrency"] , "->",
+      "continuous", top["continuous"]["tokens_per_s"], "tok/s vs legacy",
+      top["legacy"]["tokens_per_s"], "tok/s",
+      "(" + str(acc["throughput_ratio_at_top"]) + "x),",
+      "p95_ttft_ms", top["continuous"]["p95_ttft_ms"],
+      "p95_tpot_ms", top["continuous"]["p95_tpot_ms"])
+'
+
 echo "CI_OK"

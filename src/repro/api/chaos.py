@@ -54,6 +54,17 @@ Known sync points (prefix-matchable, e.g. ``"store."`` hits all three):
                               transition (killable — a kill here lands
                               between the phase write and the workload
                               edit, the crash-idempotence window)
+``serve.step``                serve engine about to run one batched
+                              tick (latency here models a slow model
+                              step — the TTFT/TPOT degradation a canary
+                              verdict must catch)
+``serve.admit``               a queued request just admitted into a
+                              slot with its block budget reserved
+``serve.complete``            a request reached a terminal state and
+                              its slot is being recycled
+``router.dispatch``           router picked a replica for a request
+                              (latency here models a congested front
+                              door)
 ====================          =================================================
 """
 
@@ -77,6 +88,7 @@ SYNC_POINTS = (
     "runtime.worker.reconcile",
     "node.agent.publish", "node.agent.heartbeat",
     "rollout.stamp", "rollout.delete", "rollout.evict", "rollout.canary",
+    "serve.step", "serve.admit", "serve.complete", "router.dispatch",
 )
 
 

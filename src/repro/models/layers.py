@@ -234,7 +234,12 @@ def attention_apply(cfg: ModelConfig, p: Params, x: jax.Array,
 def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
                      cache: Dict[str, jax.Array], pos: jax.Array
                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    """One-token decode. x: (B,1,D); cache k/v: (B,Scache,K,hd); pos: ().
+    """One-token decode. x: (B,1,D); cache k/v: (B,Scache,K,hd).
+
+    ``pos`` is either a scalar () — the legacy whole-batch clock — or a
+    per-slot vector (B,): each row writes and masks at its own position,
+    which is what lets a serving engine admit and recycle slots
+    independently instead of aligning every request to one clock.
 
     For sliding-window configs the cache is a ring buffer of size
     min(window, S_max); keys carry their RoPE at write time so slot order
@@ -243,6 +248,7 @@ def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
     B, _, _ = x.shape
     cdt = cfg.compute_jnp_dtype()
     Scache = cache["k"].shape[1]
+    pos = jnp.broadcast_to(pos, (B,))            # scalar clock -> per-slot
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
@@ -250,14 +256,13 @@ def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
         q = q + p["bq"].astype(cdt)
         k = k + p["bk"].astype(cdt)
         v = v + p["bv"].astype(cdt)
-    cos, sin = rope_table(pos[None], cfg.resolved_head_dim, cfg.rope_theta)
-    q = apply_rope(q, cos[None], sin[None])
-    k = apply_rope(k, cos[None], sin[None])
-    slot = jnp.where(cfg.sliding_window > 0, pos % Scache, pos)
-    ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                  (0, slot, 0, 0))
-    cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                  (0, slot, 0, 0))
+    cos, sin = rope_table(pos[:, None], cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = pos % Scache if cfg.sliding_window > 0 else pos
+    rows = jnp.arange(B)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
     ck = constrain(ck, "batch", "seq_kv", "act_kv", None)
     cv = constrain(cv, "batch", "seq_kv", "act_kv", None)
     H = cfg.num_heads
@@ -268,14 +273,124 @@ def attention_decode(cfg: ModelConfig, p: Params, x: jax.Array,
                         ).astype(jnp.float32) / math.sqrt(hd)
     idx = jnp.arange(Scache)
     if cfg.sliding_window > 0:
-        valid = idx < jnp.minimum(pos + 1, Scache)
+        valid = idx[None, :] < jnp.minimum(pos + 1, Scache)[:, None]
     else:
-        valid = idx <= pos
-    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        valid = idx[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1).astype(cdt)
     out = jnp.einsum("bkgqs,bskh->bqkgh", w, cv.astype(cdt)).reshape(B, 1, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
     return y, {"k": ck, "v": cv}
+
+
+def attention_decode_paged(cfg: ModelConfig, p: Params, x: jax.Array,
+                           kv: Dict[str, jax.Array], block_table: jax.Array,
+                           pos: jax.Array, adv: jax.Array
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked decode against a paged (block) KV cache.
+
+    x: (B,C,D) post-norm chunk; kv k/v: (NB, bs, K, hd) — the *physical*
+    block pool shared by every slot (block 0 is the reserved always-zero
+    sentinel, never written); block_table: (B, nb) slot-logical block ->
+    physical block; pos: (B,) tokens already resident per slot; adv:
+    (B,) real tokens in this chunk per slot (0 = slot inactive, padded
+    rows are dropped).
+
+    Queries attend to the pre-chunk resident keys (gathered through the
+    block table, masked to ``kpos < pos`` and the sliding window) plus
+    the in-chunk keys under a causal mask, in one softmax; the chunk's
+    K/V are then scattered into the pool at positions [pos, pos+adv).
+    Writes for padded rows (j >= adv) are index-dropped, so one call
+    serves mixed prefill/decode/idle slots.
+    """
+    B, C, _ = x.shape
+    cdt = cfg.compute_jnp_dtype()
+    NB, bs = kv["k"].shape[0], kv["k"].shape[1]
+    nb = block_table.shape[1]
+    S = nb * bs
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    qpos = pos[:, None] + jnp.arange(C, dtype=pos.dtype)[None, :]    # (B,C)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    cos, sin = rope_table(qpos, hd, cfg.rope_theta)                  # (B,C,half)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    # resident keys, gathered logical-contiguous through the block table
+    ck = kv["k"][block_table].reshape(B, S, K, hd).astype(cdt)
+    cv = kv["v"][block_table].reshape(B, S, K, hd).astype(cdt)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    mask_res = kpos[None, None, :] < pos[:, None, None]              # (B,1,S)
+    mask_res = jnp.broadcast_to(mask_res, (B, C, S))
+    jj = jnp.arange(C, dtype=jnp.int32)
+    mask_chunk = (jj[None, :] <= jj[:, None])[None]                  # causal (1,C,C)
+    mask_chunk = mask_chunk & (jj[None, None, :] < adv[:, None, None])
+    if cfg.sliding_window > 0:
+        w_ = cfg.sliding_window
+        mask_res = mask_res & (kpos[None, None, :]
+                               > qpos[:, :, None] - w_)
+        mask_chunk = mask_chunk & (qpos[:, None, :]
+                                   > qpos[:, :, None] - w_)
+
+    qg = q.reshape(B, C, K, G, hd)
+    s_res = jnp.einsum("bqkgh,bskh->bkgqs", qg, ck).astype(jnp.float32) * scale
+    s_chk = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    s_res = jnp.where(mask_res[:, None, None], s_res, -1e30)
+    s_chk = jnp.where(mask_chunk[:, None, None], s_chk, -1e30)
+    scores = jnp.concatenate([s_res, s_chk], axis=-1)                # (B,K,G,C,S+C)
+    w = jax.nn.softmax(scores, axis=-1).astype(cdt)
+    out = (jnp.einsum("bkgqs,bskh->bqkgh", w[..., :S], cv)
+           + jnp.einsum("bkgqs,bskh->bqkgh", w[..., S:], v))
+    out = out.reshape(B, C, H, hd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+    # scatter the chunk's K/V into the pool; padded rows are dropped
+    lb = jnp.clip(qpos // bs, 0, nb - 1)
+    blk = jnp.take_along_axis(block_table, lb, axis=1)               # (B,C)
+    writable = (jj[None, :] < adv[:, None]) & (blk > 0)
+    blk = jnp.where(writable, blk, NB)                               # OOB -> drop
+    off = qpos % bs
+    nk = kv["k"].at[blk, off].set(k.astype(kv["k"].dtype), mode="drop")
+    nv = kv["v"].at[blk, off].set(v.astype(kv["v"].dtype), mode="drop")
+    return y, {"k": nk, "v": nv}
+
+
+def ssd_decode_chunk(cfg: ModelConfig, p: Params, x: jax.Array,
+                     cache: Dict[str, jax.Array], adv: jax.Array
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Sequential SSD decode over a chunk. x: (B,C,D); adv: (B,).
+
+    State/conv updates are gated per token to ``j < adv`` so padded rows
+    of a mixed prefill/decode chunk never advance a slot's recurrence.
+    """
+    B, C, _ = x.shape
+
+    def gate(keep: jax.Array, new: Dict[str, jax.Array],
+             old: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        return {key: jnp.where(keep.reshape((B,) + (1,) * (new[key].ndim - 1)),
+                               new[key], old[key])
+                for key in new}
+
+    if C == 1:
+        y, nc = ssd_decode(cfg, p, x, cache)
+        return y, gate(adv > 0, nc, cache)
+
+    def step(st, inp):
+        xt, j = inp                                                  # (B,D), ()
+        yj, ns = ssd_decode(cfg, p, xt[:, None], st)
+        return gate(j < adv, ns, st), yj[:, 0]
+
+    st, ys = lax.scan(step, cache,
+                      (x.transpose(1, 0, 2), jnp.arange(C, dtype=jnp.int32)))
+    return ys.transpose(1, 0, 2), st
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,

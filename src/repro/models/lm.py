@@ -29,10 +29,11 @@ from jax import lax
 
 from ..parallel.sharding import constrain
 from .config import ModelConfig
-from .layers import (attention_apply, attention_decode, build_attention,
-                     build_mlp, build_moe, build_rmsnorm, build_ssd,
-                     init_kv_cache, init_ssd_cache, mlp_apply, moe_apply,
-                     rmsnorm, ssd_apply, ssd_decode)
+from .layers import (attention_apply, attention_decode,
+                     attention_decode_paged, build_attention, build_mlp,
+                     build_moe, build_rmsnorm, build_ssd, init_kv_cache,
+                     init_ssd_cache, mlp_apply, moe_apply, rmsnorm,
+                     ssd_apply, ssd_decode, ssd_decode_chunk)
 from .modules import Builder, Mode, normal_init
 
 Params = Dict[str, Any]
@@ -242,7 +243,11 @@ def train_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
-    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    """Dense per-slot decode cache. ``pos`` is a per-slot clock (B,):
+    every slot decodes at its own position, so a serving engine can
+    admit/recycle slots independently (scalar clocks are still accepted
+    by :func:`decode_step` for old callers/checkpoints)."""
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
     L = cfg.num_layers
     if cfg.family != "ssm":
         kv = init_kv_cache(cfg, batch, max_len)
@@ -253,6 +258,122 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
         cache["ssd"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a, (L,) + a.shape), sc)
     return cache
+
+
+def init_paged_cache(cfg: ModelConfig, slots: int, num_blocks: int,
+                     block_size: int) -> Dict[str, Any]:
+    """Paged decode cache: a physical KV block pool + per-slot SSD state.
+
+    kv k/v are (L, num_blocks, block_size, K, hd) — one pool shared by
+    all slots; block 0 is the reserved always-zero sentinel that empty
+    block-table entries point at. Position clocks and block tables are
+    NOT part of this pytree: the serve-side
+    :class:`repro.serve.kvcache.KVCacheManager` owns them host-side and
+    passes them into :func:`decode_chunk` per tick.
+    """
+    cache: Dict[str, Any] = {}
+    L = cfg.num_layers
+    if cfg.family != "ssm":
+        hd = cfg.resolved_head_dim
+        shape = (L, num_blocks, block_size, cfg.num_kv_heads, hd)
+        dt = cfg.compute_jnp_dtype()
+        cache["kv"] = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if cfg.family in ("ssm", "hybrid"):
+        sc = init_ssd_cache(cfg, slots)
+        cache["ssd"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (L,) + a.shape), sc)
+    return cache
+
+
+def decode_chunk(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                 cache: Dict[str, Any], block_table: jax.Array,
+                 pos: jax.Array, adv: jax.Array,
+                 zero_blocks: Optional[jax.Array] = None,
+                 reset_slots: Optional[jax.Array] = None,
+                 unroll: int = 1) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Continuous-batching step: C tokens per slot against the paged cache.
+
+    tokens: (B,C) [audio: (B,C,ncb)]; block_table: (B,nb); pos: (B,)
+    per-slot clocks; adv: (B,) real tokens this chunk (0 = idle slot).
+    One call serves mixed phases — a slot prefilling a C-token prompt
+    chunk next to a slot decoding one token (adv=1, C-1 padded rows).
+
+    ``zero_blocks`` (fixed-size int array, padded with NB) zero-epochs
+    recycled physical blocks inside this donated call — no request can
+    ever attend to a predecessor's K/V even if masking were wrong;
+    ``reset_slots`` (B,) bool resets recycled slots' SSD recurrence the
+    same way (state is cumulative: masking alone cannot protect it).
+    Returns (logits (B,C,V...) , new cache); pos/block accounting stays
+    with the host-side manager.
+    """
+    L = cfg.num_layers
+    if zero_blocks is not None and "kv" in cache:
+        cache = dict(cache)
+        cache["kv"] = {
+            "k": cache["kv"]["k"].at[:, zero_blocks].set(0.0, mode="drop"),
+            "v": cache["kv"]["v"].at[:, zero_blocks].set(0.0, mode="drop"),
+        }
+    if reset_slots is not None and "ssd" in cache:
+        cache = dict(cache)
+        cache["ssd"] = jax.tree.map(
+            lambda a: jnp.where(
+                reset_slots.reshape((1, -1) + (1,) * (a.ndim - 2)),
+                jnp.zeros((), a.dtype), a),
+            cache["ssd"])
+
+    x, _ = embed_tokens(cfg, params, {"tokens": tokens})
+
+    def get_layer(tree, li):
+        return jax.tree.map(lambda a: lax.dynamic_index_in_dim(a, li, 0,
+                                                               keepdims=False),
+                            tree)
+
+    def set_layer(tree, sub, li):
+        return jax.tree.map(
+            lambda a, s: lax.dynamic_update_index_in_dim(a, s.astype(a.dtype),
+                                                         li, 0),
+            tree, sub)
+
+    def body(carry, scan_in):
+        h, kv_all, ssd_all = carry
+        lp, li = scan_in
+        hn = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+        if cfg.family == "ssm":
+            y, new_ssd = ssd_decode_chunk(cfg, lp["ssd"], hn,
+                                          get_layer(ssd_all, li), adv)
+            ssd_all = set_layer(ssd_all, new_ssd, li)
+            return (h + y, kv_all, ssd_all), None
+        att, new_kv = attention_decode_paged(cfg, lp["attn"], hn,
+                                             get_layer(kv_all, li),
+                                             block_table, pos, adv)
+        kv_all = set_layer(kv_all, new_kv, li)
+        if cfg.hybrid:
+            y2, new_ssd = ssd_decode_chunk(cfg, lp["ssd"], hn,
+                                           get_layer(ssd_all, li), adv)
+            ssd_all = set_layer(ssd_all, new_ssd, li)
+            att = 0.5 * (att + y2)
+        h = h + att
+        h2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
+        if cfg.num_experts > 0:
+            y, _ = moe_apply(cfg, lp["moe"], h2)
+        else:
+            y = mlp_apply(cfg, lp["mlp"], h2)
+        return (h + y, kv_all, ssd_all), None
+
+    kv0 = cache.get("kv", jnp.zeros((L, 1)))
+    ssd0 = cache.get("ssd", jnp.zeros((L, 1)))
+    (x, new_kv, new_ssd), _ = lax.scan(
+        body, (x, kv0, ssd0),
+        (params["layers"], jnp.arange(L, dtype=jnp.int32)),
+        unroll=min(unroll, cfg.num_layers))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(cfg, params, x)
+    new_cache = dict(cache)
+    if "kv" in cache:
+        new_cache["kv"] = new_kv
+    if "ssd" in cache:
+        new_cache["ssd"] = new_ssd
+    return logits, new_cache
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
@@ -381,5 +502,5 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
     if "ssd" in cache:
         cache["ssd"] = jax.tree.map(lambda c, e: e.astype(c.dtype),
                                     cache["ssd"], emitted["ssd"])
-    cache["pos"] = jnp.asarray(S, jnp.int32)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
     return logits, cache

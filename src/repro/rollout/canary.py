@@ -82,12 +82,34 @@ class CanaryController(Controller):
 
     # -- verdict -----------------------------------------------------------
     @staticmethod
-    def _breach(spec: CanaryRollout,
-                canary_slo: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    def _breach(spec: CanaryRollout, canary_slo: Dict[str, Any],
+                baseline_slo: Optional[Dict[str, Any]] = None
+                ) -> Optional[Dict[str, Any]]:
+        """First breached ceiling, or None.
+
+        Two ceiling forms: plain ``{"p95_latency_ms": 50.0}`` compares
+        the canary arm against an absolute value; relative
+        ``{"p95_latency_ms_vs_baseline": 1.5}`` compares the canary's
+        metric against ``ceiling x`` the *baseline arm's* same metric —
+        the robust form when absolute numbers drift with machine load
+        but both arms drift together.
+        """
+        baseline_slo = baseline_slo or {}
+        suffix = "_vs_baseline"
         for metric in sorted(spec.slo):
+            ceiling = spec.slo[metric]
+            if metric.endswith(suffix):
+                base_metric = metric[:-len(suffix)]
+                observed = canary_slo.get(base_metric)
+                baseline = baseline_slo.get(base_metric)
+                if (observed is not None and baseline is not None
+                        and baseline > 0 and observed > ceiling * baseline):
+                    return {"metric": metric, "ceiling": ceiling,
+                            "observed": observed, "baseline": baseline}
+                continue
             observed = canary_slo.get(metric)
-            if observed is not None and observed > spec.slo[metric]:
-                return {"metric": metric, "ceiling": spec.slo[metric],
+            if observed is not None and observed > ceiling:
+                return {"metric": metric, "ceiling": ceiling,
                         "observed": observed}
         return None
 
@@ -148,12 +170,19 @@ class CanaryController(Controller):
         if not self._overlay_applied(wl, spec):
             self._apply_overlay(plane, spec.workload, spec)
             return True
-        canary_slo = wl_obj.status.outputs.get("slo", {}).get("canary", {})
+        slo_out = wl_obj.status.outputs.get("slo", {})
+        canary_slo = slo_out.get("canary", {})
+        baseline_slo = slo_out.get("baseline", {})
         if canary_slo.get("samples", 0) < spec.min_samples:
             return self._set(plane, obj, CONDITION_READY, False,
                              "CollectingSamples",
                              "waiting for canary slo samples")
-        breach = self._breach(spec, canary_slo)
+        if (any(m.endswith("_vs_baseline") for m in spec.slo)
+                and baseline_slo.get("samples", 0) < spec.min_samples):
+            return self._set(plane, obj, CONDITION_READY, False,
+                             "CollectingSamples",
+                             "relative ceilings need baseline slo samples")
+        breach = self._breach(spec, canary_slo, baseline_slo)
         verdict_phase = PHASE_ROLLED_BACK if breach else PHASE_PROMOTED
         sync_point("rollout.canary", killable=True,
                    canary=obj.meta.name, phase=verdict_phase)

@@ -1,2 +1,6 @@
-from .engine import ServeEngine, Request
+from .engine import (CacheOverflowError, DeadlineExceededError,
+                     EmptyPromptError, Request, ServeEngine, ServeError)
+from .kvcache import KVCacheManager
+from .legacy import LegacyRequest, LegacyServeEngine
+from .router import Router, RouterOverloadError
 from .slo import SloTracker

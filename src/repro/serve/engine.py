@@ -1,18 +1,32 @@
-"""Batched serving engine: prefill + decode over the shared jit steps.
+"""Continuous-batching serve engine over a paged KV cache.
 
-A deliberately small continuous-batching engine: requests join a fixed-
-width slot table; prefill primes per-request caches (left-padded to the
-engine's prompt bucket); decode advances every active slot one token per
-step; finished slots are recycled. Greedy or temperature sampling.
+The data plane the control plane orchestrates: requests join slots
+independently (no shared clock), prefill in chunks so a joining request
+catches up in a few engine ticks instead of one token per step, decode
+one token per tick, and recycle through
+:class:`~repro.serve.kvcache.KVCacheManager` — recycling releases the
+slot's blocks and zero-epochs them on reuse, so no request can attend
+to a predecessor's K/V or SSM state (the seed engine's contamination
+bug). One jitted :func:`repro.models.lm.decode_chunk` call serves mixed
+phases per tick: a slot prefilling a 16-token prompt chunk rides next
+to a slot decoding its 40th token.
 
-This is the serving-path driver used by examples/serve_lm.py and the
-serving integration tests — the dry-run's serve_step is the same
-decode_step this engine jits.
+Request lifecycle errors are *per-request and typed* — an invalid
+submit (empty prompt, budget past ``max_len``) or a cache-bounds breach
+fails that request with an error subclass of :class:`ServeError`, never
+the engine; ``run(max_steps=...)`` marks whatever is still unfinished
+at the cap as timed out and returns it, so callers (and the rollout
+SLO error-rate judging canaries) see every loss.
+
+The seed fixed-width batcher survives as
+:class:`repro.serve.legacy.LegacyServeEngine` — the benchmark baseline
+and the regression oracle its bugs are demonstrated against.
 """
 
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -20,8 +34,58 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api.chaos import sync_point
 from ..models import lm
 from ..models.config import ModelConfig
+from .kvcache import KVCacheManager
+
+__all__ = ["ServeEngine", "Request", "ServeError", "EmptyPromptError",
+           "CacheOverflowError", "DeadlineExceededError",
+           "STATUS_QUEUED", "STATUS_PREFILL", "STATUS_DECODE",
+           "STATUS_DONE", "STATUS_FAILED"]
+
+
+class ServeError(RuntimeError):
+    """Base class for per-request serving failures."""
+
+
+class EmptyPromptError(ServeError):
+    """submit() got an empty prompt (the seed engine crashed later,
+    deep in _next_tokens, via prompt[-1])."""
+
+
+class CacheOverflowError(ServeError):
+    """The request's token budget does not fit the slot's KV capacity
+    (the seed engine silently indexed past the cache instead)."""
+
+
+class DeadlineExceededError(ServeError):
+    """run(max_steps=...) hit its cap with this request unfinished (the
+    seed engine silently dropped such requests from its return)."""
+
+
+STATUS_QUEUED = "queued"
+STATUS_PREFILL = "prefill"
+STATUS_DECODE = "decode"
+STATUS_DONE = "done"
+STATUS_FAILED = "failed"
+
+_TERMINAL = (STATUS_DONE, STATUS_FAILED)
+
+# One jitted decode step per ModelConfig (hashable, value-equal):
+# every engine on the same config shares traces instead of recompiling.
+_JIT_STEPS: Dict[Any, Any] = {}
+
+
+def _jitted_step(cfg: ModelConfig):
+    fn = _JIT_STEPS.get(cfg)
+    if fn is None:
+        fn = jax.jit(
+            lambda p, t, c, bt, pos, adv, zb, rs: lm.decode_chunk(
+                cfg, p, t, c, bt, pos, adv, zero_blocks=zb, reset_slots=rs),
+            donate_argnums=(2,))
+        _JIT_STEPS[cfg] = fn
+    return fn
 
 
 @dataclass
@@ -30,62 +94,215 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0
     uid: int = 0
-    # filled by the engine
+    # engine-written
     generated: List[int] = field(default_factory=list)
-    done: bool = False
+    state: str = STATUS_QUEUED
+    error: Optional[ServeError] = None
+    t_submit: float = 0.0
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.state == STATUS_DONE
+
+    @property
+    def failed(self) -> bool:
+        return self.state == STATUS_FAILED
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token."""
+        return (None if self.t_first_token is None
+                else self.t_first_token - self.t_submit)
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Time per output token over the decode phase."""
+        if (self.t_done is None or self.t_first_token is None
+                or len(self.generated) < 2):
+            return None
+        return (self.t_done - self.t_first_token) / (len(self.generated) - 1)
 
 
 class ServeEngine:
+    """Continuous batching: admit/prefill/decode/recycle per slot.
+
+    ``prefill_chunk`` bounds how many prompt tokens a slot feeds per
+    tick (1 reproduces the seed's token-by-token catch-up — the
+    benchmark's fixed-width reference behavior). ``num_blocks``
+    overrides the KV pool size (default: exactly ``slots`` worth);
+    admission reserves a request's whole budget up front, so the pool
+    is the real backpressure surface.
+    """
+
     def __init__(self, cfg: ModelConfig, params: Any, batch_slots: int = 4,
-                 max_len: int = 256, seed: int = 0):
+                 max_len: int = 256, seed: int = 0, *,
+                 prefill_chunk: int = 16, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 clock=time.perf_counter):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
+        self.prefill_chunk = max(1, prefill_chunk)
         self.rng = np.random.RandomState(seed)
+        self.clock = clock
         self._uid = itertools.count()
-
-        self._decode = jax.jit(
-            lambda p, t, c: lm.decode_step(cfg, p, t, c),
-            donate_argnums=(2,))
-        self.cache = lm.init_cache(cfg, batch_slots, max_len)
-        # per-slot decode positions (the global cache["pos"] is scalar, so
-        # the engine aligns all slots to a common clock; joining requests
-        # are prefilled token-by-token to catch up — simple + correct)
+        self.kv = KVCacheManager(cfg, batch_slots, max_len,
+                                 block_size=block_size,
+                                 num_blocks=num_blocks)
+        self._step = _jitted_step(cfg)
         self.active: List[Optional[Request]] = [None] * batch_slots
+        self._fed: List[int] = [0] * batch_slots   # prompt tokens fed so far
         self.pending: List[Request] = []
         self.completed: List[Request] = []
-        self._slot_fill: List[int] = [0] * batch_slots  # prompt tokens pending
+        self.failed: List[Request] = []
+        self.steps = 0
+        # (completed, failed) counts already returned by run()
+        self._run_mark = [0, 0]
 
-    # -- API -------------------------------------------------------------
+    # -- submission --------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
                temperature: float = 0.0) -> Request:
+        """Queue a request. Invalid requests come back already failed
+        with a typed ``error`` — the engine itself never crashes on bad
+        input, and ``run()`` reports them with everything else."""
         r = Request(list(prompt), max_new_tokens, temperature,
                     uid=next(self._uid))
+        r.t_submit = self.clock()
+        if not r.prompt:
+            return self._fail(r, EmptyPromptError("empty prompt"))
+        budget = len(r.prompt) + max_new_tokens
+        if budget > self.max_len:
+            return self._fail(r, CacheOverflowError(
+                f"prompt ({len(r.prompt)}) + max_new_tokens "
+                f"({max_new_tokens}) = {budget} exceeds max_len "
+                f"{self.max_len}"))
+        if max_new_tokens < 1:
+            return self._fail(r, ServeError("max_new_tokens must be >= 1"))
         self.pending.append(r)
         return r
 
-    def _admit(self) -> None:
-        for i in range(self.slots):
-            if self.active[i] is None and self.pending:
-                r = self.pending.pop(0)
-                self.active[i] = r
-                self._slot_fill[i] = 0
+    def _fail(self, r: Request, err: ServeError,
+              slot: Optional[int] = None) -> Request:
+        r.state = STATUS_FAILED
+        r.error = err
+        r.t_done = self.clock()
+        self.failed.append(r)
+        if slot is not None:
+            self.kv.release(slot)
+            self.active[slot] = None
+        return r
 
-    def _next_tokens(self) -> np.ndarray:
-        """Token each slot feeds this step (prompt feed or last sample)."""
-        toks = np.zeros((self.slots,), np.int32)
-        for i, r in enumerate(self.active):
-            if r is None:
+    # -- scheduling --------------------------------------------------------
+    def _admit(self) -> None:
+        """FIFO admission under strict block reservation: the head of
+        the queue is admitted only when a slot AND its whole budget's
+        blocks are free — admitted requests always run to completion."""
+        for i in range(self.slots):
+            if not self.pending:
+                return
+            if self.active[i] is not None:
                 continue
-            fed = self._slot_fill[i]
+            head = self.pending[0]
+            budget = len(head.prompt) + head.max_new_tokens
+            if not self.kv.can_reserve(budget):
+                return        # backpressure: pool drained, keep FIFO order
+            self.pending.pop(0)
+            self.kv.reserve(i, budget)
+            self.active[i] = head
+            self._fed[i] = 0
+            head.state = STATUS_PREFILL
+            sync_point("serve.admit", slot=i, uid=head.uid)
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or any(r is not None for r in self.active)
+
+    # -- one tick ----------------------------------------------------------
+    def step(self) -> bool:
+        """One engine tick; returns False when there was nothing to do."""
+        sync_point("serve.step", step=self.steps)
+        self._admit()
+        slots_live = [i for i, r in enumerate(self.active) if r is not None]
+        if not slots_live:
+            return False
+        self.steps += 1
+
+        adv = np.zeros((self.slots,), np.int32)
+        for i in slots_live:
+            r = self.active[i]
+            remaining = len(r.prompt) - self._fed[i]
+            want = min(remaining, self.prefill_chunk) if remaining > 0 else 1
+            cap = self.kv.capacity(i)
+            if int(self.kv.pos[i]) + want > min(cap, self.max_len):
+                # strict reservation makes this unreachable through
+                # submit(); kept as the typed bounds gate (seed bug #2)
+                self._fail(r, CacheOverflowError(
+                    f"slot {i} clock {int(self.kv.pos[i])}+{want} past "
+                    f"capacity {cap}"), slot=i)
+                continue
+            adv[i] = want
+        slots_live = [i for i in slots_live if adv[i] > 0]
+        if not slots_live:
+            return False
+
+        C = 1 if int(adv.max()) <= 1 else self.prefill_chunk
+        feed = np.zeros((self.slots, C), np.int32)
+        for i in slots_live:
+            r = self.active[i]
+            n = int(adv[i])
+            fed = self._fed[i]
             if fed < len(r.prompt):
-                toks[i] = r.prompt[fed]
-            elif r.generated:
-                toks[i] = r.generated[-1]
+                feed[i, :n] = r.prompt[fed:fed + n]
             else:
-                toks[i] = r.prompt[-1]
-        return toks
+                feed[i, 0] = r.generated[-1]
+        arr = jnp.asarray(feed)
+        if self.cfg.frontend == "audio":
+            arr = jnp.broadcast_to(arr[..., None],
+                                   arr.shape + (self.cfg.num_codebooks,))
+
+        zb = self.kv.take_zero_blocks()
+        if zb is None:
+            zb = np.full((self.slots * self.kv.blocks_per_slot,),
+                         self.kv.num_blocks, np.int32)
+        rs = self.kv.take_reset_slots()
+        if rs is None:
+            rs = np.zeros((self.slots,), bool)
+        logits, self.kv.cache = self._step(
+            self.params, arr, self.kv.cache, jnp.asarray(self.kv.table),
+            jnp.asarray(self.kv.pos), jnp.asarray(adv),
+            jnp.asarray(zb), jnp.asarray(rs))
+        logits_np = np.asarray(logits, np.float32)
+        if self.cfg.frontend == "audio":
+            logits_np = logits_np[:, :, 0]   # sample codebook 0
+
+        now = self.clock()
+        for i in slots_live:
+            r = self.active[i]
+            n = int(adv[i])
+            self.kv.advance(i, n)
+            if self._fed[i] < len(r.prompt):
+                self._fed[i] += n
+                if self._fed[i] < len(r.prompt):
+                    continue                 # more prompt chunks to go
+            nxt = self._sample(logits_np[i, n - 1], r)
+            if r.t_first_token is None:
+                r.t_first_token = now
+                r.state = STATUS_DECODE
+            r.generated.append(nxt)
+            if len(r.generated) >= r.max_new_tokens:
+                r.state = STATUS_DONE
+                r.t_done = now
+                self.completed.append(r)
+                self.kv.release(i)
+                self.active[i] = None
+                sync_point("serve.complete", slot=i, uid=r.uid)
+        return True
 
     def _sample(self, logits: np.ndarray, r: Request) -> int:
         if r.temperature <= 0:
@@ -94,34 +311,44 @@ class ServeEngine:
         p /= p.sum()
         return int(self.rng.choice(len(p), p=p))
 
-    def step(self) -> None:
-        """One engine tick: feed one token per active slot."""
-        self._admit()
-        toks = self._next_tokens()
-        arr = jnp.asarray(toks)[:, None]
-        if self.cfg.frontend == "audio":
-            arr = jnp.broadcast_to(arr[..., None],
-                                   arr.shape + (self.cfg.num_codebooks,))
-        logits, self.cache = self._decode(self.params, arr, self.cache)
-        logits_np = np.asarray(logits[:, 0], np.float32)
-        if self.cfg.frontend == "audio":
-            logits_np = logits_np[:, 0]  # sample codebook 0 for the demo
-        for i, r in enumerate(self.active):
-            if r is None:
-                continue
-            self._slot_fill[i] += 1
-            if self._slot_fill[i] < len(r.prompt):
-                continue  # still prefilling this slot
-            nxt = self._sample(logits_np[i], r)
-            r.generated.append(nxt)
-            if len(r.generated) >= r.max_new_tokens:
-                r.done = True
-                self.completed.append(r)
-                self.active[i] = None
-
+    # -- drive -------------------------------------------------------------
     def run(self, max_steps: int = 512) -> List[Request]:
+        """Drive until idle or ``max_steps``. Returns EVERY request that
+        reached a terminal state since the previous ``run()`` —
+        completions AND failures (submit-time rejections included);
+        whatever is still pending/active at the cap is failed with
+        :class:`DeadlineExceededError` (the seed engine silently dropped
+        them)."""
+        n_done, n_fail = self._run_mark
         steps = 0
-        while (self.pending or any(self.active)) and steps < max_steps:
+        while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
-        return self.completed
+        if self.has_work():
+            for i, r in enumerate(self.active):
+                if r is not None:
+                    self._fail(r, DeadlineExceededError(
+                        f"active at step cap {max_steps}"), slot=i)
+            while self.pending:
+                self._fail(self.pending.pop(0), DeadlineExceededError(
+                    f"pending at step cap {max_steps}"))
+        self._run_mark = [len(self.completed), len(self.failed)]
+        return self.completed[n_done:] + self.failed[n_fail:]
+
+    # -- telemetry ---------------------------------------------------------
+    def load(self) -> float:
+        """Router load score: occupied slots + queue pressure, weighted
+        by KV pool exhaustion (a full pool can't admit even into an
+        empty slot)."""
+        occupied = sum(r is not None for r in self.active)
+        pool = self.kv.used_blocks / max(1, self.kv.num_blocks - 1)
+        return (occupied + len(self.pending)) / max(1, self.slots) + pool
+
+    def stats(self) -> Dict[str, Any]:
+        return {"slots": self.slots,
+                "active": sum(r is not None for r in self.active),
+                "pending": len(self.pending),
+                "completed": len(self.completed),
+                "failed": len(self.failed),
+                "steps": self.steps,
+                **self.kv.stats()}
