@@ -27,6 +27,9 @@ Framework perf:
                       percentiles vs concurrency, continuous batching
                       vs the seed fixed-width arm; writes
                       BENCH_serve.json
+  bench_obs        -> observability overhead: enabled-vs-disabled
+                      registry + tracer on reconcile churn and serve
+                      tokens/s (budget <=2% each)
 
 The control-plane sections write ``BENCH_reconcile.json`` at the repo
 root (bench_serve writes ``BENCH_serve.json``) — the perf trajectory
@@ -79,7 +82,7 @@ def bench_kernels() -> None:
 
 
 SECTIONS = ["startup", "nccl", "placement", "reconcile", "control_scale",
-            "recovery", "informer", "scheduler", "rollout", "serve",
+            "recovery", "informer", "scheduler", "rollout", "serve", "obs",
             "roofline", "kernels"]
 
 
@@ -136,6 +139,9 @@ def main() -> None:
             # separate from the control-plane BENCH_reconcile.json)
             result = bench_serve.main(["--smoke"] if args.smoke else [])
             print(json.dumps(result, indent=1))
+        elif section == "obs":
+            from . import bench_obs
+            perf["obs"] = bench_obs.main(["--smoke"] if args.smoke else [])
         elif section == "roofline":
             from . import bench_roofline
             bench_roofline.main()

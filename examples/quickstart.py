@@ -41,6 +41,9 @@ ap.add_argument("--reconcile-mode", default="threaded",
                 choices=["threaded", "inline"],
                 help="threaded: background informer runtime (default); "
                      "inline: blocking reconcile() reference arm")
+ap.add_argument("--obs-dir", default=None,
+                help="write metrics.prom/metrics.json/spans.json here at "
+                     "exit (scripts/obsctl.py reads them)")
 args = ap.parse_args()
 
 import jax
@@ -62,6 +65,11 @@ registry = core.DriverRegistry()
 registry.add(core.TpuDriver(cluster)).add(core.IciDriver(cluster))
 plane = ControlPlane.open(args.state_dir, registry, cluster,
                           announce=lambda m: print(f"[1] {m}"))
+obs_tracer = None
+if args.obs_dir:
+    from repro.obs import Tracer, install_tracer
+    obs_tracer = Tracer().attach(plane.store)
+    install_tracer(obs_tracer)
 if plane.recovery_info is None:
     print(f"[1] discovery: {sum(len(s) for s in registry.pool.slices)} "
           f"devices published as "
@@ -121,5 +129,11 @@ if runtime is not None:
     print(f"[5] informer runtime stopped: {stats.reconciled} reconciles, "
           f"{stats.informer_rounds} informer rounds, "
           f"{stats.panics} panics")
+if obs_tracer is not None:
+    from repro.obs import dump_artifacts, install_tracer
+    install_tracer(None)
+    obs_tracer.detach()
+    paths = dump_artifacts(args.obs_dir, tracer=obs_tracer)
+    print(f"[obs] artifacts: {', '.join(sorted(paths.values()))}")
 print("done — the same object submission drives the 256/512-chip "
       "production mesh in repro.launch.dryrun")

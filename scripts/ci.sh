@@ -32,7 +32,31 @@ PYTEST_GLOBAL_TIMEOUT=900 STRESS_SEEDS=7,23,42 LOCK_WITNESS=1 \
   python -m pytest -x -q tests/test_runtime.py -k stress
 
 echo "== smoke: declarative quickstart (journaled, threaded informer) =="
-python examples/quickstart.py --state-dir "$(mktemp -d)/state"
+CI_OBS_ROOT="$(mktemp -d)"
+python examples/quickstart.py --state-dir "$CI_OBS_ROOT/state" \
+  --obs-dir "$CI_OBS_ROOT/obs"
+
+echo "== smoke: obsctl metrics/describe over the quickstart plane =="
+# the out-of-process CLI (docs/OBSERVABILITY.md) must read back what
+# the run above left behind: registry artifacts from --obs-dir, and a
+# kubectl-style describe recovered purely from the WAL state dir
+python scripts/obsctl.py metrics --obs-dir "$CI_OBS_ROOT/obs" \
+  | python -c '
+import sys
+text = sys.stdin.read()
+assert "plane_workqueue_enqueued_total" in text, "metrics dump missing workqueue counters"
+assert "plane_runtime_reconcile_seconds" in text, "metrics dump missing reconcile histogram"
+print("obsctl metrics:", sum(1 for l in text.splitlines()
+                             if l and not l.startswith("#")), "samples")
+'
+python scripts/obsctl.py describe Workload/quickstart-job \
+  --state-dir "$CI_OBS_ROOT/state" \
+  | python -c '
+import sys
+text = sys.stdin.read()
+assert "Ready" in text and "True" in text, "describe lost the Ready condition"
+print("obsctl describe: Workload/quickstart-job Ready=True")
+'
 
 # (the kill-and-recover SIGKILL smoke now runs inside tier-1 as
 # tests/test_kill_recover.py — no second standalone invocation)
@@ -158,6 +182,23 @@ print("serve:",
       "(" + str(acc["throughput_ratio_at_top"]) + "x),",
       "p95_ttft_ms", top["continuous"]["p95_ttft_ms"],
       "p95_tpot_ms", top["continuous"]["p95_tpot_ms"])
+'
+
+echo "== smoke: observability overhead bench (reduced sizes, merged into BENCH_reconcile.json) =="
+# the whole obs plane enabled (registry + attached tracer) vs disabled
+# on reconcile churn and serve tokens/s; both workloads must stay
+# within the <=2% budget (docs/OBSERVABILITY.md)
+python -m benchmarks.run --only obs --smoke \
+  | python -c '
+import json, sys
+blob = sys.stdin.read()
+r = json.loads(blob[blob.index("{"):blob.rindex("}") + 1])
+rec, srv = r["reconcile"], r["serve"]
+assert r["within_budget"], (
+    "obs overhead over budget: reconcile %s%%, serve %s%%"
+    % (rec["overhead_pct"], srv["overhead_pct"]))
+print("obs: reconcile_overhead %s%%, serve_overhead %s%% (budget %s%%)"
+      % (rec["overhead_pct"], srv["overhead_pct"], rec["budget_pct"]))
 '
 
 echo "CI_OK"

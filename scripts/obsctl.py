@@ -1,0 +1,198 @@
+#!/usr/bin/env python
+"""obsctl: out-of-process observability CLI for the control plane.
+
+Usage:
+    python scripts/obsctl.py describe Workload/serve --state-dir DIR
+    python scripts/obsctl.py metrics --obs-dir DIR [--format text|json]
+    python scripts/obsctl.py trace --obs-dir DIR --out spans.json
+    python scripts/obsctl.py trace --state-dir DIR --out spans.json
+
+``describe`` recovers the store from its WAL/snapshots and prints a
+kubectl-style view: metadata, the conditions table, controller outputs
+and the object's event timeline replayed straight off the WAL segments.
+``metrics`` dumps the artifacts an ``--obs-dir`` run wrote
+(``metrics.prom`` / ``metrics.json``). ``trace`` re-validates and
+copies a recorded ``spans.json``, or — offline, from ``--state-dir``
+alone — rebuilds each object's final lifecycle cycle from condition
+timestamps. Both outputs load in Perfetto (https://ui.perfetto.dev)
+or chrome://tracing; see docs/OBSERVABILITY.md.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.api.persistence import (_WAL_RE, WriteAheadLog, _state_files,
+                                   has_state, load_api_object, recover_store)
+from repro.obs import (METRICS_JSON, METRICS_PROM, SPANS_JSON, chrome_trace,
+                       spans_from_store, validate_spans)
+
+
+def _die(msg: str) -> int:
+    print(f"obsctl: {msg}", file=sys.stderr)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# describe
+# ---------------------------------------------------------------------------
+
+def _resolve(store, ref: str):
+    """'Workload/serve' (case-insensitive kind) -> ApiObject or None."""
+    if "/" not in ref:
+        return None, f"expected <kind>/<name>, got {ref!r}"
+    kind, name = ref.split("/", 1)
+    kinds = {o.meta.kind.lower(): o.meta.kind
+             for o in store.list_objects() if o.meta.kind}
+    real = kinds.get(kind.lower())
+    if real is None:
+        return None, (f"unknown kind {kind!r}; store has: "
+                      + ", ".join(sorted(kinds.values())))
+    obj = store.try_get(real, name)
+    if obj is None:
+        names = sorted(o.meta.name for o in store.list_objects(real))
+        return None, (f"no {real} named {name!r}; have: "
+                      + (", ".join(names) or "<none>"))
+    return obj, real
+
+
+def _timeline(state_dir: str, kind: str, name: str):
+    """(rv, type, conditions-summary) per WAL record touching the object."""
+    rows = []
+    for _base, path in _state_files(state_dir, _WAL_RE):
+        for rec in WriteAheadLog.replay(path):
+            if rec.get("k") != kind or rec.get("n") != name:
+                continue
+            summary = ""
+            obj = rec.get("obj")
+            if obj is None and isinstance(rec.get("o"), dict):
+                try:
+                    obj = load_api_object(rec["o"])
+                except Exception:  # noqa: BLE001 - timeline is best-effort
+                    obj = None
+            if obj is not None:
+                summary = " ".join(f"{c.type}={c.status}"
+                                   for c in obj.status.conditions)
+            rows.append((rec.get("v", 0), rec.get("t", "?"), summary))
+    rows.sort(key=lambda r: r[0])
+    return rows
+
+
+def cmd_describe(args) -> int:
+    if not args.state_dir or not has_state(args.state_dir):
+        return _die(f"--state-dir {args.state_dir!r} has no recoverable "
+                    f"state")
+    store, info = recover_store(args.state_dir)
+    obj, real = _resolve(store, args.object)
+    if obj is None:
+        return _die(real)
+    meta = obj.meta
+    print(f"Name:         {meta.name}")
+    print(f"Kind:         {real}")
+    print(f"UID:          {meta.uid}")
+    print(f"Generation:   {meta.generation}")
+    print(f"Version:      {meta.resource_version} "
+          f"(store v{store.resource_version}, {info.objects} objects "
+          f"recovered)")
+    if meta.labels:
+        print("Labels:       " + ", ".join(f"{k}={v}" for k, v
+                                           in sorted(meta.labels.items())))
+    print("Conditions:")
+    if not obj.status.conditions:
+        print("  <none>")
+    for c in obj.status.conditions:
+        print(f"  {c.type:<12} {c.status:<8} gen={c.observed_generation:<3} "
+              f"{c.reason:<20} {c.message}")
+    if obj.status.outputs:
+        print("Outputs:      " + ", ".join(sorted(obj.status.outputs)))
+    rows = _timeline(args.state_dir, real, meta.name)
+    print(f"Events:       ({len(rows)} WAL records)")
+    for rv, typ, summary in rows[-args.events:]:
+        print(f"  v{rv:<6} {typ:<9} {summary}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def cmd_metrics(args) -> int:
+    fname = METRICS_JSON if args.format == "json" else METRICS_PROM
+    path = os.path.join(args.obs_dir or "", fname)
+    if not args.obs_dir or not os.path.exists(path):
+        return _die(f"no {fname} under --obs-dir {args.obs_dir!r} "
+                    f"(run an entry point with --obs-dir first)")
+    with open(path) as f:
+        sys.stdout.write(f.read())
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# trace
+# ---------------------------------------------------------------------------
+
+def cmd_trace(args) -> int:
+    if args.obs_dir:
+        src = os.path.join(args.obs_dir, SPANS_JSON)
+        if not os.path.exists(src):
+            return _die(f"no {SPANS_JSON} under --obs-dir {args.obs_dir!r}")
+        with open(src) as f:
+            trace = json.load(f)
+        events = trace.get("traceEvents", [])
+    elif args.state_dir:
+        if not has_state(args.state_dir):
+            return _die(f"--state-dir {args.state_dir!r} has no "
+                        f"recoverable state")
+        store, _info = recover_store(args.state_dir)
+        roots = spans_from_store(store)
+        problems = validate_spans(roots)
+        if problems:
+            return _die("malformed spans: " + "; ".join(problems[:5]))
+        trace = chrome_trace(roots)
+        events = trace["traceEvents"]
+    else:
+        return _die("trace needs --obs-dir (recorded) or --state-dir "
+                    "(offline reconstruction)")
+    with open(args.out, "w") as f:
+        json.dump(trace, f, indent=1)
+        f.write("\n")
+    spans = sum(1 for e in events if e.get("ph") == "X")
+    print(f"wrote {args.out}: {spans} spans, {len(events)} trace events "
+          f"(load in Perfetto or chrome://tracing)")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="obsctl", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    d = sub.add_parser("describe", help="kubectl-style object view")
+    d.add_argument("object", help="<kind>/<name>, e.g. Workload/serve")
+    d.add_argument("--state-dir", required=True)
+    d.add_argument("--events", type=int, default=20,
+                   help="show at most N trailing WAL records")
+    d.set_defaults(fn=cmd_describe)
+
+    m = sub.add_parser("metrics", help="dump recorded metrics")
+    m.add_argument("--obs-dir", required=True)
+    m.add_argument("--format", default="text", choices=["text", "json"])
+    m.set_defaults(fn=cmd_metrics)
+
+    t = sub.add_parser("trace", help="export a Perfetto-loadable trace")
+    t.add_argument("--obs-dir", default=None)
+    t.add_argument("--state-dir", default=None)
+    t.add_argument("--out", default="spans.json")
+    t.set_defaults(fn=cmd_trace)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

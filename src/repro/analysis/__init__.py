@@ -1,10 +1,11 @@
 """planelint: AST-based invariant analysis for the control plane.
 
-Five checkers over the repo (see docs/ANALYSIS.md for the why of
-each): ``lock-discipline`` and ``lock-order`` (locks.py),
+Checkers over the repo (see docs/ANALYSIS.md for the why of each):
+``lock-discipline`` and ``lock-order`` (locks.py),
 ``codec-completeness`` (codecs.py), ``condition-fixpoint``
 (conditions.py), ``sync-points`` (syncpoints.py), ``cel-static``
-(celcheck.py). Run via ``scripts/lint.py`` or programmatically:
+(celcheck.py), ``metrics-discipline`` (metrics.py). Run via
+``scripts/lint.py`` or programmatically:
 
     from repro.analysis import Project, run_checks
     findings = run_checks(Project.discover(repo_root))
@@ -13,7 +14,8 @@ each): ``lock-discipline`` and ``lock-order`` (locks.py),
 from .framework import (CHECKERS, Finding, Project, SourceFile,
                         register, render_human, render_json, run_checks)
 # importing the checker modules populates the registry
-from . import celcheck, codecs, conditions, locks, syncpoints  # noqa: F401
+from . import (celcheck, codecs, conditions, locks,  # noqa: F401
+               metrics, syncpoints)
 
 __all__ = ["CHECKERS", "Finding", "Project", "SourceFile", "register",
            "render_human", "render_json", "run_checks"]

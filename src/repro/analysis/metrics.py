@@ -1,0 +1,210 @@
+"""Checker: metrics-discipline for the obs registry instruments.
+
+The metrics registry (:mod:`repro.obs.registry`) is string-keyed and
+label-schema'd, which makes two classes of bug silent at runtime:
+
+* a metric name built with an f-string (``counter(f"plane_{kind}")``)
+  explodes cardinality and defeats the catalog's duplicate detection;
+* ``handle.cell(wrong_label=...)`` raises only on the first call of a
+  code path a test may never drive.
+
+This pass enforces the declaration discipline statically over ``src``,
+``scripts`` and ``benchmarks`` (tests own their fixture instruments):
+
+* every ``counter()/gauge()/histogram()`` call is a **module-scope
+  assignment** — handles are declared once at import, never created in
+  request paths;
+* the metric name is a **string literal** with the ``plane_`` prefix
+  (an f-string or computed name is a finding, not a style nit);
+* the ``labels=`` schema, when present, is a **literal tuple/list of
+  string constants** — the bounded label universe is readable off the
+  declaration;
+* no instrument name is declared **twice** anywhere in the tree;
+* every ``handle.cell(...)`` whose handle is resolvable in the same
+  file passes exactly the declared label keys, as keywords.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .framework import Finding, Project, SourceFile, register
+
+__all__ = ["check_metrics_discipline", "instrument_registrations"]
+
+CHECK = "metrics-discipline"
+FACTORIES = ("counter", "gauge", "histogram")
+PREFIX = "plane_"
+
+
+def _obs_aliases(tree: ast.AST) -> Tuple[Dict[str, str], Set[str]]:
+    """(factory aliases {local: factory}, obs module aliases).
+
+    Tracks ``from repro.obs import counter [as c]`` (any relative
+    depth) and ``import repro.obs [as obs]`` / ``from repro import
+    obs`` so both ``counter(...)`` and ``obs.counter(...)`` register.
+    """
+    factories: Dict[str, str] = {}
+    modules: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "obs" or mod.endswith(".obs") or "obs." in mod:
+                for alias in node.names:
+                    if alias.name in FACTORIES:
+                        factories[alias.asname or alias.name] = alias.name
+                    elif alias.name == "registry":
+                        modules.add(alias.asname or alias.name)
+            elif node.names and any(a.name == "obs" for a in node.names):
+                for alias in node.names:
+                    if alias.name == "obs":
+                        modules.add(alias.asname or alias.name)
+        elif isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.endswith(".obs") or alias.name == "obs":
+                    modules.add(alias.asname or alias.name.split(".")[0])
+    return factories, modules
+
+
+def _factory_of(node: ast.Call, factories: Dict[str, str],
+                modules: Set[str]) -> Optional[str]:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return factories.get(fn.id)
+    if (isinstance(fn, ast.Attribute) and fn.attr in FACTORIES
+            and isinstance(fn.value, ast.Name) and fn.value.id in modules):
+        return fn.attr
+    return None
+
+
+def _literal_labels(call: ast.Call) -> Tuple[Optional[Tuple[str, ...]], bool]:
+    """(declared labels or None, is-literal). No labels kwarg -> ((), True)."""
+    for kw in call.keywords:
+        if kw.arg != "labels":
+            continue
+        if not isinstance(kw.value, (ast.Tuple, ast.List)):
+            return None, False
+        out: List[str] = []
+        for elt in kw.value.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None, False
+            out.append(elt.value)
+        return tuple(out), True
+    return (), True
+
+
+def instrument_registrations(src: SourceFile
+                             ) -> List[Tuple[ast.Call, str, List[str]]]:
+    """Every instrument factory call with the names it is assigned to
+    at module scope ([] when the call happens anywhere else)."""
+    factories, modules = _obs_aliases(src.tree)
+    if not factories and not modules:
+        return []
+    assigned: Dict[int, List[str]] = {}          # id(call) -> target names
+    body = getattr(src.tree, "body", [])
+    for stmt in body:
+        value, names = None, []
+        if isinstance(stmt, ast.Assign):
+            value = stmt.value
+            names = [t.id for t in stmt.targets if isinstance(t, ast.Name)]
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            value = stmt.value
+            if isinstance(stmt.target, ast.Name):
+                names = [stmt.target.id]
+        if isinstance(value, ast.Call):
+            assigned[id(value)] = names
+    out: List[Tuple[ast.Call, str, List[str]]] = []
+    for node in ast.walk(src.tree):
+        if isinstance(node, ast.Call):
+            factory = _factory_of(node, factories, modules)
+            if factory is not None:
+                out.append((node, factory, assigned.get(id(node), [])))
+    return out
+
+
+def _cell_calls(src: SourceFile) -> List[Tuple[ast.Call, str]]:
+    """(call, handle variable name) for every ``X.cell(...)``."""
+    out = []
+    for node in ast.walk(src.tree):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "cell"
+                and isinstance(node.func.value, ast.Name)):
+            out.append((node, node.func.value.id))
+    return out
+
+
+@register(CHECK)
+def check_metrics_discipline(project: Project) -> Iterable[Finding]:
+    seen: Dict[str, Tuple[str, int]] = {}        # metric name -> first site
+    for src in project.scope("src", "scripts", "benchmarks"):
+        if src.parse_error is not None:
+            continue
+        handles: Dict[str, Tuple[str, ...]] = {} # module var -> labels
+        for call, factory, targets in instrument_registrations(src):
+            if not targets:
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"{factory}() called outside a module-scope "
+                    f"assignment — instruments must be declared once at "
+                    f"import, with cells created from the handle")
+            name_node = call.args[0] if call.args else None
+            if isinstance(name_node, ast.JoinedStr):
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"{factory}() metric name is an f-string — names "
+                    f"must be literals so the catalog stays greppable "
+                    f"and cardinality bounded")
+                continue
+            if not (isinstance(name_node, ast.Constant)
+                    and isinstance(name_node.value, str)):
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"{factory}() metric name is not a string literal")
+                continue
+            name = name_node.value
+            if not name.startswith(PREFIX):
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"metric {name!r} lacks the {PREFIX!r} namespace "
+                    f"prefix")
+            if name in seen:
+                first_file, first_line = seen[name]
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"metric {name!r} already declared at "
+                    f"{first_file}:{first_line} — one handle per "
+                    f"instrument, import it instead")
+            else:
+                seen[name] = (src.rel, call.lineno)
+            labels, literal = _literal_labels(call)
+            if not literal:
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"metric {name!r} labels= is not a literal "
+                    f"tuple/list of strings — the label universe must "
+                    f"be readable off the declaration")
+                continue
+            for target in targets:
+                handles[target] = labels
+        for call, head in _cell_calls(src):
+            declared = handles.get(head)
+            if declared is None:
+                continue                         # not a handle we resolved
+            if call.args:
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"{head}.cell() takes label values as keywords "
+                    f"only; positional args bypass the schema check")
+            keys = {kw.arg for kw in call.keywords if kw.arg}
+            star = any(kw.arg is None for kw in call.keywords)
+            if star:
+                continue                         # **labels: dynamic, skip
+            if keys != set(declared):
+                yield Finding(
+                    CHECK, src.rel, call.lineno,
+                    f"{head}.cell({', '.join(sorted(keys)) or ''}) does "
+                    f"not match the declared label set "
+                    f"({', '.join(declared) or 'unlabeled'})")

@@ -77,8 +77,17 @@ import time
 from contextlib import contextmanager
 from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
+from ..obs import histogram, quantile
+
 __all__ = ["FaultInjector", "InjectedFault", "sync_point", "install",
            "installed", "SYNC_POINTS", "LockOrderWitness"]
+
+# Injected-delay distribution per sync point (docs/OBSERVABILITY.md).
+# Label cardinality is bounded by SYNC_POINTS — the planelint
+# sync-points pass keeps that tuple closed.
+_CHAOS_DELAY = histogram("plane_chaos_injected_delay_seconds",
+                         "injected delay per sync-point hit",
+                         labels=("point",))
 
 SYNC_POINTS = (
     "store.create", "store.write",
@@ -138,6 +147,9 @@ class FaultInjector:
         self.kills = 0
         self.latency_injections = 0
         self.latency_injected_s = 0.0
+        # point -> histogram cell: the injected-delay distribution the
+        # summary() satellite surfaces (and the exporters aggregate)
+        self._h_delay: Dict[str, object] = {}
 
     @staticmethod
     def _matches(point: str, patterns: Tuple[str, ...]) -> bool:
@@ -171,6 +183,12 @@ class FaultInjector:
                 delay += base * self._rng.uniform(0.5, 1.5)
                 self.latency_injections += 1
                 self.latency_injected_s += delay
+            if delay > 0.0:
+                cell = self._h_delay.get(point)
+                if cell is None:
+                    cell = self._h_delay[point] = _CHAOS_DELAY.cell(
+                        point=point)
+                cell.observe(delay)
         if kill:
             raise InjectedFault(f"injected worker kill at {point} "
                                 f"(kill #{self.kills}, seed {self.seed})")
@@ -179,10 +197,20 @@ class FaultInjector:
 
     def summary(self) -> Dict[str, object]:
         with self._lock:
+            hists = {}
+            for point, cell in sorted(self._h_delay.items()):
+                snap = cell.snapshot()          # type: ignore[attr-defined]
+                hists[point] = {
+                    "count": snap["count"],
+                    "sum_s": round(snap["sum"], 6),
+                    "p50_ms": round(quantile(snap, 0.5) * 1e3, 3),
+                    "p95_ms": round(quantile(snap, 0.95) * 1e3, 3),
+                }
             return {"seed": self.seed, "hits": dict(self.hits),
                     "delays": self.delays, "kills": self.kills,
                     "latency_injections": self.latency_injections,
-                    "latency_injected_s": round(self.latency_injected_s, 6)}
+                    "latency_injected_s": round(self.latency_injected_s, 6),
+                    "delay_hist": hists}
 
 
 # The installed injector. One global slot (not thread-local): the whole

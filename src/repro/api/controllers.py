@@ -41,10 +41,21 @@ from .objects import (ApiObject, Condition, FALSE, TRUE, Workload,
                       CONDITION_SCHEDULED, PHASE_ORDER)
 from .store import AdmissionError, ApiStore, DELETED, WatchEvent
 from .workqueue import WorkQueue
+from ..obs import gauge
 
 __all__ = ["Controller", "AllocationController", "PrepareController",
            "AttachmentController", "WorkloadController", "ControlPlane",
            "RETRYABLE_REASONS"]
+
+# Rolling-update pressure per workload (docs/OBSERVABILITY.md): how many
+# replicas above spec (surge) and how many below ready (unavailable)
+# the current rolling step holds open.
+_RO_SURGE = gauge("plane_rollout_surge_replicas",
+                  "replicas above spec during a rolling step",
+                  labels=("workload",))
+_RO_UNAVAILABLE = gauge("plane_rollout_unavailable_replicas",
+                        "spec replicas not Ready during a rolling step",
+                        labels=("workload",))
 
 # Condition reasons that mark a reconcile *failure* the controller will
 # retry (as opposed to a normal "waiting for an upstream phase" state).
@@ -267,6 +278,19 @@ class WorkloadController(Controller):
     kind = "Workload"
     name = "workload-controller"
 
+    def __init__(self) -> None:
+        # workload name -> (surge cell, unavailable cell); label
+        # cardinality is the live-workload count (registry fuse caps it)
+        self._g_cells: Dict[str, Tuple[Any, Any]] = {}
+
+    def _gauges(self, workload: str) -> Tuple[Any, Any]:
+        cells = self._g_cells.get(workload)
+        if cells is None:
+            cells = self._g_cells[workload] = (
+                _RO_SURGE.cell(workload=workload),
+                _RO_UNAVAILABLE.cell(workload=workload))
+        return cells
+
     def _replica_claims(self, plane: "ControlPlane", obj: ApiObject
                         ) -> Tuple[Optional[List[ApiObject]], str, bool]:
         """One bounded rolling step -> (claims, admission msg, converged).
@@ -360,6 +384,9 @@ class WorkloadController(Controller):
             rollout["revisions"][rev] = rollout["revisions"].get(rev, 0) + 1
         if obj.status.outputs.get("rollout") != rollout:
             store.set_output("Workload", obj.meta.name, "rollout", rollout)
+        surge, unavail = self._gauges(obj.meta.name)
+        surge.set(max(0, len(claims) - wl.replicas))
+        unavail.set(max(0, wl.replicas - rollout["ready"]))
         return claims, admission_msg, plan.converged
 
     def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:

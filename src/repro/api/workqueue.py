@@ -23,14 +23,36 @@ rounds.
 
 from __future__ import annotations
 
+import threading
 import zlib
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from .chaos import sync_point
+from ..obs import active, counter, gauge, histogram
 
 __all__ = ["WorkQueue"]
 
 Key = Tuple[str, str]  # (kind, name)
+
+# Registry instruments (docs/OBSERVABILITY.md). These are *sampled*:
+# every queue mutation already runs under the plane's reconcile lock,
+# so the hot path counts in plain ints and mirrors them into the cells
+# from a registry collect hook — exporters see the same totals, the
+# per-operation cost is an integer add in both the enabled and the
+# disabled arm, and telemetry() reads the plain ints (always exact).
+_WQ_ENQUEUED = counter("plane_workqueue_enqueued_total",
+                       "objects accepted into the dirty queue")
+_WQ_POPPED = counter("plane_workqueue_popped_total",
+                     "keys admitted to a reconcile round")
+_WQ_DEFERRED = counter("plane_workqueue_deferred_total",
+                       "pop attempts parked by a backoff window")
+_WQ_REQUEUES = counter("plane_workqueue_requeues_total",
+                       "keys re-dirtied after having been popped")
+_WQ_DEPTH = gauge("plane_workqueue_depth",
+                  "queued keys (ready or in backoff)")
+_WQ_BACKOFF = histogram("plane_workqueue_backoff_rounds",
+                        "backoff delay applied per reconcile failure",
+                        buckets=(1, 2, 4, 8, 16, 32, 64))
 
 
 class WorkQueue:
@@ -44,14 +66,62 @@ class WorkQueue:
         self._clock = 0                         # current round number
         self.backoff_base = backoff_base
         self.backoff_cap = backoff_cap
-        # telemetry: how much work the queue actually admitted/deferred
-        self.enqueued = 0
-        self.popped = 0
-        self.deferred = 0
-        # keys re-dirtied after having been popped at least once — the
-        # numerator of the requeue rate (work the loop saw more than once)
-        self.requeues = 0
+        # telemetry: plain ints on the hot path (mutations are serialized
+        # by the plane's reconcile lock), mirrored into this queue's
+        # registry cells only when an exporter collects (_flush_obs).
+        # _n_requeues counts keys re-dirtied after having been popped at
+        # least once — the numerator of the requeue rate.
+        self._n_enqueued = 0
+        self._n_popped = 0
+        self._n_deferred = 0
+        self._n_requeues = 0
+        self._c_enqueued = _WQ_ENQUEUED.cell()
+        self._c_popped = _WQ_POPPED.cell()
+        self._c_deferred = _WQ_DEFERRED.cell()
+        self._c_requeues = _WQ_REQUEUES.cell()
+        self._g_depth = _WQ_DEPTH.cell()
+        self._h_backoff = _WQ_BACKOFF.cell()
+        self._flushed = [0, 0, 0, 0]
+        self._flush_lock = threading.Lock()
+        if self._c_enqueued.enabled:
+            active().add_collect_hook(self._flush_obs)
         self._popped_once: Dict[Key, None] = {}
+
+    def _flush_obs(self) -> None:
+        """Mirror the plain-int telemetry into the registry cells.
+
+        Collect hook: runs when an exporter reads, never on the hot
+        path. Serialized against concurrent collects by its own lock;
+        deltas keep the cumulative cells exact at every flush.
+        """
+        with self._flush_lock:
+            pairs = ((self._n_enqueued, self._c_enqueued),
+                     (self._n_popped, self._c_popped),
+                     (self._n_deferred, self._c_deferred),
+                     (self._n_requeues, self._c_requeues))
+            for i, (n, cell) in enumerate(pairs):
+                d = n - self._flushed[i]
+                if d:
+                    cell.inc(d)
+                    self._flushed[i] = n
+            self._g_depth.set(len(self))
+
+    # counters stayed readable under their PR 2 names (thin views)
+    @property
+    def enqueued(self) -> int:
+        return self._n_enqueued
+
+    @property
+    def popped(self) -> int:
+        return self._n_popped
+
+    @property
+    def deferred(self) -> int:
+        return self._n_deferred
+
+    @property
+    def requeues(self) -> int:
+        return self._n_requeues
 
     # -- enqueue -------------------------------------------------------------
     def add(self, kind: str, name: str) -> None:
@@ -60,9 +130,9 @@ class WorkQueue:
         bucket = self._dirty.setdefault(kind, {})
         if name not in bucket:
             bucket[name] = None
-            self.enqueued += 1
+            self._n_enqueued += 1
             if (kind, name) in self._popped_once:
-                self.requeues += 1
+                self._n_requeues += 1
 
     def add_all(self, kind: str, names: Iterable[str]) -> None:
         for n in names:
@@ -89,6 +159,7 @@ class WorkQueue:
         delay = window + jitter
         self._failures[key] = f + 1
         self._not_before[key] = self._clock + delay
+        self._h_backoff.observe(delay)
         return delay
 
     def success(self, kind: str, name: str) -> None:
@@ -102,8 +173,8 @@ class WorkQueue:
         self.success(kind, name)
         self._popped_once.pop((kind, name), None)
         bucket = self._dirty.get(kind)
-        if bucket is not None:
-            bucket.pop(name, None)
+        if bucket is not None and name in bucket:
+            del bucket[name]
 
     def failures(self, kind: str, name: str) -> int:
         return self._failures.get((kind, name), 0)
@@ -127,12 +198,12 @@ class WorkQueue:
             for name in bucket:
                 if self._not_before.get((kind, name), 0) > self._clock:
                     keep[name] = None
-                    self.deferred += 1
+                    self._n_deferred += 1
                 else:
                     out.append((kind, name))
-                    self.popped += 1
                     self._popped_once[(kind, name)] = None
             self._dirty[kind] = keep
+        self._n_popped += len(out)
         return out
 
     def fast_forward(self) -> bool:
@@ -168,9 +239,11 @@ class WorkQueue:
     def telemetry(self) -> Dict[str, object]:
         """Operational counters for ``ControlPlaneRuntime.stats()``.
 
-        ``requeue_rate`` is requeues ÷ pops — how often a popped key came
-        back (healing churn, backoff retries); ``in_backoff`` counts keys
-        currently parked inside a backoff window.
+        A thin view over this queue's registry cells (PR 10): the same
+        numbers the Prometheus/JSON exporters aggregate. ``requeue_rate``
+        is requeues ÷ pops — how often a popped key came back (healing
+        churn, backoff retries); ``in_backoff`` counts keys currently
+        parked inside a backoff window.
         """
         return {
             "depth_by_kind": self.depth_by_kind(),

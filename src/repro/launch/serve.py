@@ -118,7 +118,16 @@ def main() -> None:
     ap.add_argument("--node-plane", action="store_true",
                     help="run per-node agents; replica claims are "
                          "scheduler-placed and survive node death")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write metrics.prom/metrics.json/spans.json "
+                         "here at exit (scripts/obsctl.py reads them)")
     args = ap.parse_args()
+
+    obs_tracer = None
+    if args.obs_dir:
+        from ..obs import Tracer, install_tracer
+        obs_tracer = Tracer()
+        install_tracer(obs_tracer)
 
     knd = None
     plane = None
@@ -127,6 +136,8 @@ def main() -> None:
                                        state_dir=args.state_dir,
                                        reconcile_mode=args.reconcile_mode,
                                        node_plane=args.node_plane)
+        if obs_tracer is not None:
+            obs_tracer.attach(plane.store)
         lat = wl.status.outputs["phase_latency_s"]
         claims = wl.status.outputs["claims"]
         print(f"[knd] serve replica set Ready: {len(claims)} claims "
@@ -200,6 +211,11 @@ def main() -> None:
                                   "rounds": stats.informer_rounds}
     if plane is not None and plane.registry.node_plane is not None:
         plane.registry.node_plane.stop()
+    if obs_tracer is not None:
+        from ..obs import dump_artifacts, install_tracer
+        install_tracer(None)
+        obs_tracer.detach()
+        out["obs"] = dump_artifacts(args.obs_dir, tracer=obs_tracer)
     print(json.dumps(out, indent=1))
 
 

@@ -54,7 +54,16 @@ def main() -> None:
                          "published per host under heartbeat leases, "
                          "claims are placed by the topology scheduler, "
                          "and a dead agent is evicted + rescheduled")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write metrics.prom/metrics.json/spans.json "
+                         "here at exit (scripts/obsctl.py reads them)")
     args = ap.parse_args()
+
+    obs_tracer = None
+    if args.obs_dir:
+        from ..obs import Tracer, install_tracer
+        obs_tracer = Tracer()
+        install_tracer(obs_tracer)
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -109,6 +118,8 @@ def main() -> None:
             # kill-and-resume: an existing state dir is recovered and
             # its in-flight workload adopted
             plane = ControlPlane.open(args.state_dir, reg, cluster)
+        if obs_tracer is not None:
+            obs_tracer.attach(plane.store)
         if args.node_plane:
             # agents register BEFORE the informer starts: recovered
             # Nodes hold stale leases and must re-heartbeat first, else
@@ -176,6 +187,13 @@ def main() -> None:
               f"{stats.informer_rounds} rounds, {stats.panics} panics")
     if node_plane is not None:
         node_plane.stop()
+
+    if obs_tracer is not None:
+        from ..obs import dump_artifacts, install_tracer
+        install_tracer(None)
+        obs_tracer.detach()
+        paths = dump_artifacts(args.obs_dir, tracer=obs_tracer)
+        print(f"[obs] artifacts: {', '.join(sorted(paths.values()))}")
 
     losses = [h["loss"] for h in trainer.history]
     print(json.dumps({

@@ -21,11 +21,15 @@ from typing import TYPE_CHECKING, List, Optional, Tuple
 
 from ..api.controllers import Controller
 from ..api.objects import (ApiObject, CONDITION_READY, Lease, Node)
+from ..obs import counter
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..api.controllers import ControlPlane
 
 __all__ = ["DrainController", "NodeLifecycleController", "lease_state"]
+
+_EVICTIONS = counter("plane_node_evictions_total",
+                     "dead-node inventory withdrawals (lease lapsed)")
 
 # Condition the DrainController maintains on draining nodes.
 CONDITION_DRAINED = "Drained"
@@ -61,6 +65,9 @@ class NodeLifecycleController(Controller):
     kind = "Node"
     name = "node-lifecycle-controller"
 
+    def __init__(self) -> None:
+        self._c_evictions = _EVICTIONS.cell()
+
     def reconcile(self, plane: "ControlPlane", obj: ApiObject) -> bool:
         node: Node = obj.spec
         fresh, detail = lease_state(plane, node.name)
@@ -91,6 +98,7 @@ class NodeLifecycleController(Controller):
             # waiting on) devices of this node — the eviction edge
             pool.withdraw_node(node.name)
             plane.sync_inventory()
+            self._c_evictions.inc()
             changed = True
         return changed
 

@@ -31,6 +31,7 @@ from typing import TYPE_CHECKING, Any, Dict, Optional
 from ..api.chaos import sync_point
 from ..api.controllers import Controller
 from ..api.objects import ApiObject, CanaryRollout, CONDITION_READY, Workload
+from ..obs import counter
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from ..api.controllers import ControlPlane
@@ -40,6 +41,11 @@ __all__ = ["CanaryController", "spec_blob"]
 PHASE_DEPLOYED = "Deployed"
 PHASE_PROMOTED = "Promoted"
 PHASE_ROLLED_BACK = "RolledBack"
+
+# Phase label cardinality is the closed set above.
+_CANARY_TRANSITIONS = counter("plane_rollout_canary_transitions_total",
+                              "canary phase transitions recorded",
+                              labels=("phase",))
 
 
 def spec_blob(spec: Workload) -> str:
@@ -51,6 +57,16 @@ def spec_blob(spec: Workload) -> str:
 class CanaryController(Controller):
     kind = "CanaryRollout"
     name = "canary-controller"
+
+    def __init__(self) -> None:
+        self._c_transitions: Dict[str, Any] = {}
+
+    def _count_transition(self, phase: str) -> None:
+        cell = self._c_transitions.get(phase)
+        if cell is None:
+            cell = self._c_transitions[phase] = _CANARY_TRANSITIONS.cell(
+                phase=phase)
+        cell.inc()
 
     # -- overlay edits (all idempotent) ------------------------------------
     @staticmethod
@@ -160,6 +176,7 @@ class CanaryController(Controller):
                 "CanaryRollout", obj.meta.name,
                 lambda st, p=prior: st.outputs.__setitem__(
                     "canary", {"phase": PHASE_DEPLOYED, "prior_spec": p}))
+            self._count_transition(PHASE_DEPLOYED)
             self._apply_overlay(plane, spec.workload, spec)
             self._set(plane, obj, CONDITION_READY, False, "CanaryDeployed",
                       "overlay applied; collecting slo samples")
@@ -191,6 +208,7 @@ class CanaryController(Controller):
                                         phase=p,
                                         **({"verdict": v} if v else {}))
         store.update_status("CanaryRollout", obj.meta.name, record)
+        self._count_transition(verdict_phase)
         if breach:
             self._restore(plane, spec.workload, state["prior_spec"])
         else:

@@ -37,6 +37,7 @@ import numpy as np
 from ..api.chaos import sync_point
 from ..models import lm
 from ..models.config import ModelConfig
+from ..obs import counter, emit, histogram
 from .kvcache import KVCacheManager
 
 __all__ = ["ServeEngine", "Request", "ServeError", "EmptyPromptError",
@@ -71,6 +72,23 @@ STATUS_DONE = "done"
 STATUS_FAILED = "failed"
 
 _TERMINAL = (STATUS_DONE, STATUS_FAILED)
+
+# Unlabeled: engines are unbounded-cardinality (one per replica per
+# test); cells aggregate fleet-wide at export, per-engine reads stay
+# exact through stats() (docs/OBSERVABILITY.md).
+_SRV_ADMITTED = counter("plane_serve_admitted_total",
+                        "requests admitted into a slot")
+_SRV_COMPLETED = counter("plane_serve_completed_total",
+                         "requests finished with all tokens")
+_SRV_FAILED = counter("plane_serve_failed_total",
+                      "requests failed with a typed ServeError")
+_SRV_STEPS = counter("plane_serve_steps_total",
+                     "engine ticks that fed the model")
+_SRV_QUEUE_TIME = histogram("plane_serve_queue_time_seconds",
+                            "submit -> slot admission wait")
+
+# Engine names for trace emits ("eng-0:r3"): stable within a process.
+_ENGINE_IDS = itertools.count()
 
 # One jitted decode step per ModelConfig (hashable, value-equal):
 # every engine on the same config shares traces instead of recompiling.
@@ -144,7 +162,7 @@ class ServeEngine:
                  max_len: int = 256, seed: int = 0, *,
                  prefill_chunk: int = 16, block_size: int = 16,
                  num_blocks: Optional[int] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, name: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -152,6 +170,7 @@ class ServeEngine:
         self.prefill_chunk = max(1, prefill_chunk)
         self.rng = np.random.RandomState(seed)
         self.clock = clock
+        self.name = name if name is not None else f"eng-{next(_ENGINE_IDS)}"
         self._uid = itertools.count()
         self.kv = KVCacheManager(cfg, batch_slots, max_len,
                                  block_size=block_size,
@@ -165,6 +184,15 @@ class ServeEngine:
         self.steps = 0
         # (completed, failed) counts already returned by run()
         self._run_mark = [0, 0]
+        self._c_admitted = _SRV_ADMITTED.cell()
+        self._c_completed = _SRV_COMPLETED.cell()
+        self._c_failed = _SRV_FAILED.cell()
+        self._c_steps = _SRV_STEPS.cell()
+        self._h_queue_time = _SRV_QUEUE_TIME.cell()
+
+    def _rname(self, r: Request) -> str:
+        """Trace identity for a request: engine-scoped, stable."""
+        return f"{self.name}:r{r.uid}"
 
     # -- submission --------------------------------------------------------
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
@@ -175,6 +203,8 @@ class ServeEngine:
         r = Request(list(prompt), max_new_tokens, temperature,
                     uid=next(self._uid))
         r.t_submit = self.clock()
+        emit("Request", self._rname(r), "queued",
+             prompt_len=len(r.prompt), max_new_tokens=max_new_tokens)
         if not r.prompt:
             return self._fail(r, EmptyPromptError("empty prompt"))
         budget = len(r.prompt) + max_new_tokens
@@ -193,6 +223,8 @@ class ServeEngine:
         r.state = STATUS_FAILED
         r.error = err
         r.t_done = self.clock()
+        self._c_failed.inc()
+        emit("Request", self._rname(r), "failed", error=type(err).__name__)
         self.failed.append(r)
         if slot is not None:
             self.kv.release(slot)
@@ -218,6 +250,9 @@ class ServeEngine:
             self.active[i] = head
             self._fed[i] = 0
             head.state = STATUS_PREFILL
+            self._c_admitted.inc()
+            self._h_queue_time.observe(self.clock() - head.t_submit)
+            emit("Request", self._rname(head), "admitted", slot=i)
             sync_point("serve.admit", slot=i, uid=head.uid)
 
     def has_work(self) -> bool:
@@ -232,6 +267,7 @@ class ServeEngine:
         if not slots_live:
             return False
         self.steps += 1
+        self._c_steps.inc()
 
         adv = np.zeros((self.slots,), np.int32)
         for i in slots_live:
@@ -294,10 +330,14 @@ class ServeEngine:
             if r.t_first_token is None:
                 r.t_first_token = now
                 r.state = STATUS_DECODE
+                emit("Request", self._rname(r), "first_token")
             r.generated.append(nxt)
             if len(r.generated) >= r.max_new_tokens:
                 r.state = STATUS_DONE
                 r.t_done = now
+                self._c_completed.inc()
+                emit("Request", self._rname(r), "complete",
+                     tokens=len(r.generated))
                 self.completed.append(r)
                 self.kv.release(i)
                 self.active[i] = None
@@ -345,10 +385,12 @@ class ServeEngine:
         return (occupied + len(self.pending)) / max(1, self.slots) + pool
 
     def stats(self) -> Dict[str, Any]:
+        """Thin view over this engine's registry cells (plane_serve_*);
+        zeros under a disabled MetricsRegistry (bench-only)."""
         return {"slots": self.slots,
                 "active": sum(r is not None for r in self.active),
                 "pending": len(self.pending),
-                "completed": len(self.completed),
-                "failed": len(self.failed),
-                "steps": self.steps,
+                "completed": int(self._c_completed.value),
+                "failed": int(self._c_failed.value),
+                "steps": int(self._c_steps.value),
                 **self.kv.stats()}

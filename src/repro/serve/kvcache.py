@@ -35,8 +35,16 @@ import numpy as np
 
 from ..models import lm
 from ..models.config import ModelConfig
+from ..obs import gauge
 
 __all__ = ["KVCacheManager"]
+
+# Unlabeled: one cell per manager, summed fleet-wide at export;
+# per-manager occupancy stays exact through stats().
+_KV_USED = gauge("plane_serve_kv_used_blocks",
+                 "KV pool blocks currently reserved by admitted requests")
+_KV_FREE = gauge("plane_serve_kv_free_blocks",
+                 "KV pool blocks free for admission")
 
 
 class KVCacheManager:
@@ -67,6 +75,9 @@ class KVCacheManager:
         # physical blocks awaiting zero-epoch in the next decode_chunk
         self._pending_zero: List[int] = []
         self._pending_reset = np.zeros((slots,), bool)
+        self._g_used = _KV_USED.cell()
+        self._g_free = _KV_FREE.cell()
+        self._g_free.set(len(self._free))
 
     # -- accounting --------------------------------------------------------
     def blocks_for(self, tokens: int) -> int:
@@ -106,6 +117,8 @@ class KVCacheManager:
         self.epoch[slot] += 1
         self._pending_zero.extend(blocks)
         self._pending_reset[slot] = True
+        self._g_used.set(self.used_blocks)
+        self._g_free.set(self.free_blocks)
 
     def advance(self, slot: int, n: int) -> None:
         """Move the slot's clock after a chunk; bounds were checked by
@@ -123,6 +136,8 @@ class KVCacheManager:
         self._owned[slot] = []
         self.table[slot, :] = 0
         self.pos[slot] = 0
+        self._g_used.set(self.used_blocks)
+        self._g_free.set(self.free_blocks)
 
     # -- per-tick device-side hygiene -------------------------------------
     def take_zero_blocks(self) -> Optional[np.ndarray]:
@@ -147,7 +162,9 @@ class KVCacheManager:
         return out
 
     def stats(self) -> Dict[str, int]:
-        return {"free_blocks": self.free_blocks,
-                "used_blocks": self.used_blocks,
+        """Thin view over this manager's registry gauge cells
+        (plane_serve_kv_*); zeros under a disabled registry."""
+        return {"free_blocks": int(self._g_free.value),
+                "used_blocks": int(self._g_used.value),
                 "num_blocks": self.num_blocks - 1,
                 "block_size": self.block_size}

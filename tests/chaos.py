@@ -33,6 +33,7 @@ from __future__ import annotations
 import faulthandler
 import os
 import random
+import tempfile
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -42,11 +43,13 @@ from repro.api import (ControlPlane, ControlPlaneRuntime, FaultInjector,
                        Workload, CONDITION_ALLOCATED, CONDITION_READY)
 from repro.api import chaos as chaos_hooks
 from repro.core import ClaimSpec, DeviceRequest, ResourceClaimTemplate
+from repro.obs import Tracer
 
 from conftest import chip_claim, make_tpu_plane
 
 __all__ = ["watchdog", "run_stress", "oracle_outcomes",
-           "assert_pool_consistent", "StressResult", "DeadlockError"]
+           "assert_pool_consistent", "StressResult", "DeadlockError",
+           "export_failure_trace"]
 
 
 class DeadlockError(AssertionError):
@@ -97,6 +100,7 @@ class StressResult:
     injector: Optional[dict] = None
     stats: Optional[object] = None
     witness: Optional[dict] = None     # lock-order witness summary
+    tracer: Optional[Tracer] = None    # lifecycle tracer (always attached)
 
     def outcome(self) -> Tuple:
         """The comparable core (oracle equivalence)."""
@@ -148,6 +152,19 @@ def assert_pool_consistent(plane: ControlPlane) -> None:
     for dev_id, uid in list(pool._allocated.items()):
         assert uid in live_uids, \
             f"pool device {dev_id} allocated to dead claim uid {uid}"
+
+
+def export_failure_trace(tracer: Tracer, seed: int) -> str:
+    """Chrome-trace dump of whatever the tracer saw, for a failed run.
+
+    Lands in ``$OBS_TRACE_DIR`` when set (the CI artifact dir),
+    otherwise a fresh tempdir; load the file in Perfetto to see every
+    object's lifecycle up to the failure.
+    """
+    out_dir = os.environ.get("OBS_TRACE_DIR") or tempfile.mkdtemp(
+        prefix="chaos-trace-")
+    os.makedirs(out_dir, exist_ok=True)
+    return tracer.export(os.path.join(out_dir, f"chaos_seed{seed}.json"))
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +245,9 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
     injector = FaultInjector(seed=seed, delay_prob=delay_prob,
                              max_delay_s=max_delay_s, kill_prob=kill_prob,
                              max_kills=max_kills)
+    # Always trace (O(1) appends under the store lock); exported only
+    # when the run fails, so a red gate ships its lifecycle evidence.
+    tracer = Tracer().attach(plane.store)
     errors: List[BaseException] = []
 
     def submitter(t: int) -> None:
@@ -264,35 +284,43 @@ def run_stress(seed: int, *, n_threads: int = 4, n_claims: int = 8,
         except BaseException as e:  # noqa: BLE001
             errors.append(e)
 
-    with watchdog(deadline_s, note=f"stress seed={seed}"):
-        with chaos_hooks.installed(injector):
-            runtime = ControlPlaneRuntime(plane, workers_per_kind=2,
-                                          max_worker_restarts=4 * max_kills,
-                                          poll_interval_s=0.005)
-            if order_witness is not None:
-                order_witness.attach_runtime(runtime)
-            with runtime as rt:
-                threads = [threading.Thread(target=submitter, args=(t,),
-                                            name=f"submitter-{t}")
-                           for t in range(n_threads)]
-                threads.append(threading.Thread(target=template_churner,
-                                                name="template-churner"))
-                for t in threads:
-                    t.start()
-                for t in threads:
-                    t.join()
-                if errors:
-                    raise errors[0]
-                if not rt.wait_quiesce(quiesce_timeout):
-                    with rt.lock:        # snapshot vs live worker writes
-                        queue_state = repr(plane.queue)
-                    raise DeadlockError(
-                        f"stress seed={seed}: no quiescence within "
-                        f"{quiesce_timeout}s: queue={queue_state}, "
-                        f"stats={rt.stats}")
-                result = snapshot(plane, seed)
-                result.injector = injector.summary()
-                result.stats = rt.stats
+    try:
+        with watchdog(deadline_s, note=f"stress seed={seed}"):
+            with chaos_hooks.installed(injector):
+                runtime = ControlPlaneRuntime(plane, workers_per_kind=2,
+                                              max_worker_restarts=4 * max_kills,
+                                              poll_interval_s=0.005)
+                if order_witness is not None:
+                    order_witness.attach_runtime(runtime)
+                with runtime as rt:
+                    threads = [threading.Thread(target=submitter, args=(t,),
+                                                name=f"submitter-{t}")
+                               for t in range(n_threads)]
+                    threads.append(threading.Thread(target=template_churner,
+                                                    name="template-churner"))
+                    for t in threads:
+                        t.start()
+                    for t in threads:
+                        t.join()
+                    if errors:
+                        raise errors[0]
+                    if not rt.wait_quiesce(quiesce_timeout):
+                        with rt.lock:    # snapshot vs live worker writes
+                            queue_state = repr(plane.queue)
+                        raise DeadlockError(
+                            f"stress seed={seed}: no quiescence within "
+                            f"{quiesce_timeout}s: queue={queue_state}, "
+                            f"stats={rt.stats}")
+                    result = snapshot(plane, seed)
+                    result.injector = injector.summary()
+                    result.stats = rt.stats
+                    result.tracer = tracer
+    except BaseException:
+        print(f"[obs] failure trace: {export_failure_trace(tracer, seed)}",
+              flush=True)
+        raise
+    finally:
+        tracer.detach()
     if order_witness is not None:
         assert order_witness.acquisitions > 0, \
             "lock witness attached but saw no acquisitions"

@@ -350,6 +350,106 @@ class TestCelStatic:
 
 
 # ---------------------------------------------------------------------------
+# checker 6: metrics discipline (obs registry instruments)
+# ---------------------------------------------------------------------------
+
+class TestMetricsDiscipline:
+    def test_fstring_metric_name_is_flagged(self, tmp_path):
+        project = _project(tmp_path, "src", "bad.py", """
+            from repro.obs import counter
+            def make(kind):
+                return counter(f"plane_{kind}_total", "per-kind counter")
+        """)
+        findings = _checks(project, "metrics-discipline")
+        assert any("f-string" in f.message for f in findings)
+        # the non-module-scope call is a second, independent finding
+        assert any("module-scope" in f.message for f in findings)
+
+    def test_missing_prefix_is_flagged(self, tmp_path):
+        project = _project(tmp_path, "src", "bad.py", """
+            from repro.obs import gauge
+            DEPTH = gauge("queue_depth", "no namespace")
+        """)
+        findings = _checks(project, "metrics-discipline")
+        assert len(findings) == 1
+        assert "plane_" in findings[0].message
+
+    def test_duplicate_declaration_is_flagged(self, tmp_path):
+        a = tmp_path / "a.py"
+        a.write_text(textwrap.dedent("""
+            from repro.obs import counter
+            C1 = counter("plane_dup_total", "first")
+        """))
+        b = tmp_path / "b.py"
+        b.write_text(textwrap.dedent("""
+            from repro.obs import counter
+            C2 = counter("plane_dup_total", "second")
+        """))
+        project = Project.from_paths(tmp_path, {"src": [a, b]})
+        findings = _checks(project, "metrics-discipline")
+        assert len(findings) == 1
+        assert "already declared" in findings[0].message
+        assert "a.py" in findings[0].message
+
+    def test_computed_labels_are_flagged(self, tmp_path):
+        project = _project(tmp_path, "src", "bad.py", """
+            from repro.obs import histogram
+            LABELS = ("arm",)
+            H = histogram("plane_lat_seconds", "latency", labels=LABELS)
+        """)
+        findings = _checks(project, "metrics-discipline")
+        assert len(findings) == 1
+        assert "literal" in findings[0].message
+
+    def test_cell_label_mismatch_is_flagged(self, tmp_path):
+        project = _project(tmp_path, "src", "bad.py", """
+            from repro.obs import counter
+            C = counter("plane_x_total", "labeled", labels=("arm",))
+            def use():
+                return C.cell(arm="a", extra="b")
+        """)
+        findings = _checks(project, "metrics-discipline")
+        assert len(findings) == 1
+        assert "does not match the declared label set" in findings[0].message
+
+    def test_positional_cell_args_are_flagged(self, tmp_path):
+        project = _project(tmp_path, "src", "bad.py", """
+            from repro.obs import counter
+            C = counter("plane_x_total", "labeled", labels=("arm",))
+            def use():
+                return C.cell("a")
+        """)
+        findings = _checks(project, "metrics-discipline")
+        assert any("keywords" in f.message for f in findings)
+
+    def test_clean_declaration_is_silent(self, tmp_path):
+        project = _project(tmp_path, "src", "good.py", """
+            from repro.obs import counter, gauge, histogram
+            C = counter("plane_good_total", "counter", labels=("arm",))
+            G = gauge("plane_good_depth", "gauge")
+            H = histogram("plane_good_seconds", "histogram",
+                          buckets=(0.1, 1.0))
+            def use(arm):
+                return C.cell(arm=arm), G.cell(), H.cell()
+        """)
+        assert _checks(project, "metrics-discipline") == []
+
+    def test_tests_scope_is_not_scanned(self, tmp_path):
+        # tests own their fixture instruments (tests/test_obs.py)
+        project = _project(tmp_path, "tests", "test_m.py", """
+            from repro.obs import counter
+            def test_make(kind):
+                counter(f"plane_{kind}", "dynamic fixture")
+        """)
+        assert _checks(project, "metrics-discipline") == []
+
+    def test_real_tree_is_clean(self):
+        findings = run_checks(Project.discover(REPO_ROOT),
+                              ["metrics-discipline"])
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ---------------------------------------------------------------------------
 # framework behavior
 # ---------------------------------------------------------------------------
 
@@ -382,10 +482,10 @@ class TestFramework:
         assert set(d) == {"check", "file", "line", "message", "severity"}
         assert str(findings[0]).startswith("two.py:")
 
-    def test_all_five_checkers_registered(self):
+    def test_all_checkers_registered(self):
         assert {"lock-discipline", "lock-order", "codec-completeness",
-                "condition-fixpoint", "sync-points",
-                "cel-static"} <= set(CHECKERS)
+                "condition-fixpoint", "sync-points", "cel-static",
+                "metrics-discipline"} <= set(CHECKERS)
 
 
 # ---------------------------------------------------------------------------
